@@ -1,0 +1,86 @@
+"""Fig. 13: MoE forward/backward latency breakdown per balancer.
+
+Times the individual stages of one MoE layer -- gate, plan solve, weight
+distribution, reroute+dispatch, grouped FFN, combine -- on CPU (reduced
+sizes), plus the backward pass as a whole.  The structure mirrors Eq. 1:
+T_solve + max(T_reroute, T_distr) + T_a2a + T_moe.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import balancer as bal
+from repro.core.balancer import BalancerConfig
+from repro.core.layout import ExpertLayout, physical_slot_of
+from repro.moe.dispatch import bucket_by_slot, dispatch_tokens
+from repro.moe.expert import grouped_ffn
+from repro.moe.gating import GatingConfig, gate
+from repro.moe.layer import MoEConfig, init_moe_params, moe_layer_local
+
+
+def _time(f, *args, iters=10):
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e3  # ms
+
+
+def run(quiet=False, E=64, k=4, D=64, F=128, T=2048, mode="ultraep"):
+    gcfg = GatingConfig(num_experts=E, top_k=k)
+    cfg = MoEConfig(gating=gcfg, balancer=BalancerConfig(mode=mode, n_slot=2),
+                    d_model=D, d_ff=F, ep_size=1, cap_pair=T * k,
+                    cap_slot=T * k)
+    params = init_moe_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (T, D))
+    layout = cfg.layout
+    home = layout.home()
+
+    go = gate(x, params.router, gcfg)
+    lam = go.counts[None]
+    plan = bal.solve(lam, home, cfg.balancer)
+
+    t_gate = _time(jax.jit(lambda x: gate(x, params.router, gcfg).counts), x)
+    t_solve = _time(jax.jit(
+        lambda l: bal.solve(l, home, cfg.balancer).u), lam)
+    t_disp = _time(jax.jit(lambda x, q: dispatch_tokens(
+        x, go.expert_ids, q, cap_pair=cfg.cap_pair).send_x), x, plan.q[0])
+
+    disp = dispatch_tokens(x, go.expert_ids, plan.q[0], cap_pair=cfg.cap_pair)
+    slot_of = physical_slot_of(layout, plan.x)[0]
+    xs, valid, back, _ = bucket_by_slot(disp.send_x, disp.send_e, slot_of,
+                                        num_slots=E + 2, cap_slot=cfg.cap_slot)
+    w1 = jnp.concatenate([params.w1, jnp.zeros((2, D, F))])
+    w3 = jnp.concatenate([params.w3, jnp.zeros((2, D, F))])
+    w2 = jnp.concatenate([params.w2, jnp.zeros((2, F, D))])
+    t_ffn = _time(jax.jit(lambda xs, v: grouped_ffn(xs, v, w1, w3, w2)),
+                  xs, valid)
+
+    t_fwd = _time(jax.jit(lambda x: moe_layer_local(
+        x, params, cfg, axis_name=None)[0]), x)
+    t_bwd = _time(jax.jit(jax.grad(lambda x: (moe_layer_local(
+        x, params, cfg, axis_name=None)[0] ** 2).sum())), x)
+
+    rows = dict(gate_ms=t_gate, solve_ms=t_solve, dispatch_ms=t_disp,
+                grouped_ffn_ms=t_ffn, full_fwd_ms=t_fwd, full_bwd_ms=t_bwd,
+                solve_frac=t_solve / t_fwd)
+    if not quiet:
+        print(f"\n== Fig. 13: MoE layer breakdown (mode={mode}, T={T}, "
+              f"E={E}) ==")
+        for k_, v in rows.items():
+            print(f"  {k_:16s} {v:8.3f}" + (" ms" if k_.endswith("ms")
+                                            else ""))
+    return rows
+
+
+if __name__ == "__main__":
+    run(mode="ultraep")
+    run(mode="none")

@@ -1,0 +1,155 @@
+"""Fig. 15 + Table 4: balancing quality across MoE / EP / redundancy settings.
+
+Synthesised power-law loads (resembling realistic MoE routing skew, as in
+the paper's simulation) swept over (experts, EP, N_slot); for each cell the
+planners are compared on post-balance imbalance, solving time, consumed
+slots, max replica fan-out and in-flight token ratio.  Also: ``--trace``
+replays the non-stationary synthetic data stream through a learned router
+to reproduce the Fig. 4/5 load dynamics.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import metrics
+from repro.core import ref_planner as ref
+from repro.core.eplb import eplb_plan
+from repro.core.lplb import lplb_plan
+
+GRID = [
+    # (E, R, n_slot) spanning the paper's "various MoE, EP, redundancy"
+    (64, 16, 2), (128, 32, 2), (128, 64, 2), (256, 64, 2),
+    (256, 64, 4), (160, 40, 4),
+]
+
+
+def synth_load(rng, R, E, alpha=1.15, scale=40.0):
+    lam = (rng.pareto(alpha, size=(R, E)) * scale).astype(np.int64)
+    return lam
+
+
+def run(trials: int = 5, seed: int = 0, quiet: bool = False):
+    rng = np.random.default_rng(seed)
+    rows = []
+    agg = {"ours": [], "eplb+": [], "lplb": []}
+    for (E, R, n_slot) in GRID:
+        home = np.repeat(np.arange(R), E // R)
+        for t in range(trials):
+            lam = synth_load(rng, R, E)
+            pre = metrics.imbalance(
+                np.bincount(home, weights=lam.sum(0), minlength=R))
+
+            t0 = time.perf_counter()
+            p = ref.solve(lam, home, n_slot, u_min=8)
+            t_ours = time.perf_counter() - t0
+            rep_ours = metrics.report(lam, p.u, home)
+
+            t0 = time.perf_counter()
+            u_e, q_e, hosted_e = eplb_plan(lam, home, n_slot)
+            t_eplb = time.perf_counter() - t0
+            rep_eplb = metrics.report(lam, u_e, home)
+
+            t0 = time.perf_counter()
+            u_l, _, _ = lplb_plan(lam, home, n_slot)
+            t_lplb = time.perf_counter() - t0
+            rep_lplb = metrics.report(lam, u_l, home)
+
+            # locality ablation (Table 4's "w/o locality" entry)
+            q_noloc = ref.solve_reroute(lam, p.u, locality=False)
+            local = np.minimum(lam, p.u.T * 0)  # all traffic counted
+            inflight_noloc = 1.0 - (
+                np.trace(q_noloc.sum(1)) / max(lam.sum(), 1))
+
+            rows.append(dict(
+                E=E, R=R, n_slot=n_slot, trial=t, pre=pre,
+                ours=rep_ours, eplb=rep_eplb, lplb=rep_lplb,
+                t_ours_ms=t_ours * 1e3, t_eplb_ms=t_eplb * 1e3,
+                t_lplb_ms=t_lplb * 1e3,
+                inflight_noloc=inflight_noloc,
+            ))
+            agg["ours"].append(rep_ours)
+            agg["eplb+"].append(rep_eplb)
+            agg["lplb"].append(rep_lplb)
+    if not quiet:
+        print("\n== Table 4 (averaged over grid x trials) ==")
+        hdr = (f"{'metric':28s} {'EPLB+':>10s} {'LPLB':>10s} {'Ours':>10s}")
+        print(hdr)
+        mean = lambda xs: float(np.mean(xs))
+        print(f"{'result imbalance':28s} "
+              f"{mean([r.post_imbalance for r in agg['eplb+']]):10.3f} "
+              f"{mean([r.post_imbalance for r in agg['lplb']]):10.3f} "
+              f"{mean([r.post_imbalance for r in agg['ours']]):10.3f}")
+        print(f"{'sum |H(e)| (instances)':28s} "
+              f"{mean([r.total_instances for r in agg['eplb+']]):10.1f} "
+              f"{mean([r.total_instances for r in agg['lplb']]):10.1f} "
+              f"{mean([r.total_instances for r in agg['ours']]):10.1f}")
+        print(f"{'max |H(e)| (fan-out)':28s} "
+              f"{mean([r.max_fanout for r in agg['eplb+']]):10.1f} "
+              f"{mean([r.max_fanout for r in agg['lplb']]):10.1f} "
+              f"{mean([r.max_fanout for r in agg['ours']]):10.1f}")
+        print(f"{'in-flight token ratio':28s} "
+              f"{mean([r.inflight_token_ratio for r in agg['eplb+']]):10.3f} "
+              f"{mean([r.inflight_token_ratio for r in agg['lplb']]):10.3f} "
+              f"{mean([r.inflight_token_ratio for r in agg['ours']]):10.3f}")
+        print(f"{'solve time (ms, host ref)':28s} "
+              f"{np.mean([r['t_eplb_ms'] for r in rows]):10.3f} "
+              f"{np.mean([r['t_lplb_ms'] for r in rows]):10.3f} "
+              f"{np.mean([r['t_ours_ms'] for r in rows]):10.3f}")
+    return rows
+
+
+def solve_time_jit(R=64, E=256, n_slot=2, iters=20):
+    """Device-resident (jitted) solve latency -- the hot-path number."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.planner import solve_plan
+
+    rng = np.random.default_rng(0)
+    home = jnp.asarray(np.repeat(np.arange(R), E // R))
+    lam = jnp.asarray(synth_load(rng, R, E))
+    f = jax.jit(lambda l: solve_plan(l, home, n_slot=n_slot, u_min=8))
+    f(lam).u.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        f(lam).u.block_until_ready()
+    return (time.perf_counter() - t0) / iters
+
+
+def load_trace(steps=30, quiet=False):
+    """Fig. 4/5-style realized-load trace: non-stationary stream through a
+    router; reports per-step expert imbalance."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data.pipeline import DataConfig, SyntheticLMStream
+    from repro.moe.gating import GatingConfig, gate
+
+    E, D, k = 64, 32, 4
+    stream = SyntheticLMStream(DataConfig(vocab_size=256, seq_len=64,
+                                          global_batch=8, switch_period=8))
+    emb = jax.random.normal(jax.random.PRNGKey(0), (256, D))
+    wr = jax.random.normal(jax.random.PRNGKey(1), (D, E)) * D ** -0.5
+    gcfg = GatingConfig(num_experts=E, top_k=k)
+    imb = []
+    for s in range(steps):
+        toks = jnp.asarray(stream.batch(s)["tokens"]).reshape(-1)
+        x = emb[toks]
+        go = gate(x, wr, gcfg)
+        c = np.array(go.counts, np.float64)
+        imb.append(c.max() / max(c.mean(), 1e-9))
+    if not quiet:
+        print(f"expert-load imbalance over {steps} steps: "
+              f"min {min(imb):.2f} max {max(imb):.2f} "
+              f"(non-stationary drift visible)")
+    return imb
+
+
+if __name__ == "__main__":
+    run()
+    dt = solve_time_jit()
+    print(f"\njitted solve_plan (R=64, E=256): {dt*1e3:.2f} ms/solve")
+    load_trace()

@@ -1,0 +1,81 @@
+"""Benchmark runner: one section per paper table/figure.
+
+Prints a ``name,value,unit`` CSV summary at the end for machine parsing.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+
+def main() -> None:
+    t0 = time.time()
+    csv = []
+
+    from benchmarks import (bench_breakdown, bench_comm, bench_memory,
+                            bench_planner, bench_prefill, bench_training)
+
+    # -- Table 4 / Fig. 15: balancing quality ---------------------------
+    rows = bench_planner.run(trials=3)
+    ours = np.mean([r["ours"].post_imbalance for r in rows])
+    eplb = np.mean([r["eplb"].post_imbalance for r in rows])
+    csv.append(("planner.post_imbalance.ultraep", f"{ours:.3f}", "ratio"))
+    csv.append(("planner.post_imbalance.eplb_plus", f"{eplb:.3f}", "ratio"))
+    dt = bench_planner.solve_time_jit(iters=10)
+    csv.append(("planner.solve_time_jit", f"{dt*1e6:.0f}", "us"))
+    imb = bench_planner.load_trace(steps=20)
+    csv.append(("load_trace.max_imbalance", f"{max(imb):.2f}", "ratio"))
+
+    # -- Fig. 16: communication -----------------------------------------
+    comm = bench_comm.run()
+    worst = comm[-1]
+    csv.append(("comm.speedup_vs_p2p",
+                f"{worst['p2p_serial_ms']/worst['ultraep_ms']:.1f}", "x"))
+    csv.append(("comm.relay_gain",
+                f"{worst['no_relay_ms']/worst['ultraep_ms']:.2f}", "x"))
+
+    # -- Fig. 11: training throughput ------------------------------------
+    frac = bench_training.analytic(steps=25)
+    csv.append(("train.frac_ideal.ultraep", f"{frac['ultraep']*100:.1f}",
+                "%"))
+    csv.append(("train.frac_ideal.none", f"{frac['none']*100:.1f}", "%"))
+    csv.append(("train.speedup.ultraep_vs_none",
+                f"{frac['ultraep']/frac['none']:.2f}", "x"))
+    meas = bench_training.measured(steps=8)
+    csv.append(("train.measured_steps_per_s.ultraep",
+                f"{meas['ultraep']:.2f}", "steps/s"))
+
+    # -- Fig. 13: breakdown ----------------------------------------------
+    br = bench_breakdown.run()
+    csv.append(("breakdown.solve_frac_of_fwd", f"{br['solve_frac']*100:.1f}",
+                "%"))
+
+    # -- Fig. 14: memory --------------------------------------------------
+    mem = bench_memory.run()
+    csv.append(("memory.peak_vs_ideal.none",
+                f"{mem['none']['peak_bytes_mb']/mem['ideal']['peak_bytes_mb']:.1f}",
+                "x"))
+    csv.append(("memory.peak_vs_ideal.ultraep",
+                f"{mem['ultraep']['peak_bytes_mb']/mem['ideal']['peak_bytes_mb']:.1f}",
+                "x"))
+
+    # -- Fig. 12: prefill (slowest; reduced trace) ------------------------
+    pre = bench_prefill.run()
+    by = {(r["rps"], r["mode"]): r for r in pre}
+    if (8.0, "none") in by and (8.0, "ultraep") in by:
+        csv.append(("prefill.ttft_gain_rps8",
+                    f"{by[(8.0,'none')]['mean_ttft']/max(by[(8.0,'ultraep')]['mean_ttft'],1e-9):.2f}",
+                    "x"))
+
+    print("\n==== CSV SUMMARY ====")
+    print("name,value,unit")
+    for name, value, unit in csv:
+        print(f"{name},{value},{unit}")
+    print(f"# total wall time {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Serving example: chunked-prefill engine on a reduced DeepSeek-V3
+(MLA + aux-free sigmoid router + shared expert), Poisson arrivals,
+TTFT/TPOT report.
+
+    PYTHONPATH=src python examples/serve_prefill.py
+"""
+
+from repro.launch.serve import serve_trace
+
+if __name__ == "__main__":
+    serve_trace("deepseek-v3-671b", requests=12, rps=4.0, chunk=64,
+                max_new=8, reduce=True, balancer="ultraep")

@@ -1,0 +1,96 @@
+"""Assemble experiments/*.json into the EXPERIMENTS.md tables.
+
+  PYTHONPATH=src python experiments/report.py [--dryrun-dir experiments/dryrun]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def _load(d, pattern):
+    out = {}
+    for f in sorted(glob.glob(os.path.join(d, pattern))):
+        r = json.load(open(f))
+        out[(r.get("arch"), r.get("shape"))] = r
+    return out
+
+
+def _fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def dryrun_table(d, pod="1pod"):
+    rows = _load(d, f"*_{pod}_*_dryrun.json")
+    lines = [
+        f"### Dry-run ({pod}: "
+        + ("2x16x16 = 512 chips" if pod == "2pod" else "16x16 = 256 chips")
+        + ")",
+        "",
+        "| arch | shape | compile | HBM frac | collective bytes/dev | "
+        "dominant collective |",
+        "|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), r in sorted(rows.items()):
+        if not r.get("ok"):
+            lines.append(f"| {arch} | {shape} | FAIL | - | - | "
+                         f"{r.get('error','')[:60]} |")
+            continue
+        coll = r.get("collective_bytes_by_kind", {})
+        total = sum(coll.values())
+        dom = max(coll, key=coll.get) if coll else "-"
+        lines.append(
+            f"| {arch} | {shape} | {r['t_compile_s']:.0f}s | "
+            f"{r['memory']['hbm_fraction']:.2f} | "
+            f"{total/2**30:.2f} GiB | {dom} |")
+    return "\n".join(lines)
+
+
+def roofline_table(d):
+    rows = _load(d, "*_1pod_*_roofline.json")
+    lines = [
+        "### Roofline (single-pod 16x16, per device, TPU v5e: 197 TFLOP/s "
+        "bf16, 819 GB/s HBM, 50 GB/s ICI)",
+        "",
+        "| arch | shape | compute | memory | collective | bottleneck | "
+        "useful flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for (arch, shape), r in sorted(rows.items()):
+        if not r.get("ok"):
+            lines.append(f"| {arch} | {shape} | FAIL {r.get('error','')[:40]}"
+                         " | | | | | |")
+            continue
+        uf = r.get("useful_flops_ratio")
+        rf = r.get("roofline_fraction")
+        lines.append(
+            f"| {arch} | {shape} | {_fmt_s(r['compute_s'])} | "
+            f"{_fmt_s(r['memory_s'])} | {_fmt_s(r['collective_s'])} | "
+            f"{r['bottleneck']} | "
+            f"{uf*100:.0f}% | {rf*100:.1f}% |" if uf is not None else
+            f"| {arch} | {shape} | - | - | - | - | - | - |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    ap.add_argument("--roofline-dir", default="experiments/roofline")
+    args = ap.parse_args()
+    print(dryrun_table(args.dryrun_dir, "1pod"))
+    print()
+    print(dryrun_table(args.dryrun_dir, "2pod"))
+    print()
+    if os.path.isdir(args.roofline_dir):
+        print(roofline_table(args.roofline_dir))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""SPerf hillclimb runner: baseline vs optimized artifacts for the three
+chosen cells.  Writes experiments/perf/<cell>_<variant>.json.
+
+  PYTHONPATH=src python experiments/run_perf.py --cell qwen3            # etc.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+CELLS = {
+    # cell -> (arch, shape, variants {name: (analysis, microbatches, rcfg)})
+    "qwen3": ("qwen3-0.6b", "train_4k", {
+        "baseline": (True, 1, {}),
+        "blocked_ce": (True, 1, {"loss_chunks": 16}),
+        "blocked_ce_mb4": (True, 4, {"loss_chunks": 16}),
+    }),
+    "deepseek": ("deepseek-v3-671b", "train_4k", {
+        "baseline": (True, 1, {}),
+        "mb8": (True, 8, {}),
+        "mb8_chunks4_ce": (True, 8, {"distribute_chunks": 4,
+                                     "loss_chunks": 16}),
+    }),
+    "jamba": ("jamba-v0.1-52b", "train_4k", {
+        # cycle-scan affects the scanned production graph; measured via the
+        # dryrun (compile/memory) rather than the unrolled analysis.
+        "baseline_dryrun": (False, 1, {"scan_cycles": False}),
+        "cyclescan_dryrun": (False, 1, {}),
+        "cyclescan_mb8_ce": (False, 8, {"loss_chunks": 16}),
+    }),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=sorted(CELLS))
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import run_cell
+
+    arch, shape, variants = CELLS[args.cell]
+    os.makedirs(args.out, exist_ok=True)
+    for name, (analysis, mb, rcfg) in variants.items():
+        if args.variant and name != args.variant:
+            continue
+        res = run_cell(arch, shape, multi_pod=False, balancer="ultraep",
+                       analysis=analysis, microbatches=mb,
+                       rcfg_overrides=rcfg or None)
+        res["variant"] = name
+        fn = os.path.join(args.out, f"{args.cell}_{name}.json")
+        with open(fn, "w") as f:
+            json.dump(res, f, indent=2, default=str)
+        key = ("memory_s" if analysis else "memory")
+        print(f"[{args.cell}/{name}] ->", fn)
+        if analysis:
+            print(f"   compute {res['compute_s']:.3f}s  "
+                  f"memory {res['memory_s']:.3f}s  "
+                  f"collective {res['collective_s']:.3f}s  "
+                  f"bottleneck {res['bottleneck']}  "
+                  f"roofline {res['roofline_fraction']*100:.1f}%")
+        else:
+            print(f"   compile {res['t_compile_s']}s  "
+                  f"hbm_frac {res['memory']['hbm_fraction']}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

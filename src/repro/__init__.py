@@ -1,0 +1,9 @@
+"""repro: UltraEP -- exact-load real-time MoE expert balancing on TPU pods.
+
+A production-grade JAX (+ Pallas) training/serving framework implementing
+the UltraEP paper's quota-driven planner as a first-class feature, with
+multi-pod pjit/shard_map distribution, fault tolerance, and a roofline
+benchmark harness.  See DESIGN.md for the system inventory.
+"""
+
+__version__ = "0.1.0"

@@ -1,0 +1,5 @@
+"""Checkpointing: sharded save/restore with cross-mesh resharding."""
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+__all__ = ["Checkpointer"]

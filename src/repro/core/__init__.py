@@ -1,0 +1,27 @@
+"""UltraEP core: quota-driven planning, reroute, baselines, comm planning."""
+
+from repro.core.balancer import BalancerConfig, no_balance_plan, solve
+from repro.core.layout import ExpertLayout
+from repro.core.planner import (
+    Plan,
+    occurrence_index,
+    slot_assignment,
+    solve_plan,
+    solve_replication,
+    solve_reroute,
+    token_targets,
+)
+
+__all__ = [
+    "BalancerConfig",
+    "ExpertLayout",
+    "Plan",
+    "no_balance_plan",
+    "occurrence_index",
+    "slot_assignment",
+    "solve",
+    "solve_plan",
+    "solve_replication",
+    "solve_reroute",
+    "token_targets",
+]

@@ -1,0 +1,123 @@
+"""Balancer mode dispatch: none / eplb / eplb_plus / lplb / ultraep / ideal.
+
+The balancer is a *pure function* from the exact post-gating load matrix to a
+:class:`repro.core.planner.Plan`; modes ``none``, ``eplb``, ``eplb_plus`` and
+``ultraep`` are fully jittable and run inside the compiled step (the paper's
+hot-path requirement).  ``eplb`` consumes a stale EMA estimate carried in the
+train state; ``lplb`` is host-side numpy (used by planner benchmarks).
+``ideal`` is realised at the *gating* level (force-balanced router) and maps
+to ``none`` here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import planner
+from repro.core.eplb import eplb_replication_jit, round_robin_reroute_jax
+from repro.core.planner import Plan
+
+__all__ = ["BalancerConfig", "solve", "no_balance_plan"]
+
+_I32 = jnp.int32
+
+Mode = Literal["none", "eplb", "eplb_plus", "lplb", "ultraep", "ideal"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BalancerConfig:
+    mode: Mode = "ultraep"
+    n_slot: int = 2
+    u_min: int = 1
+    locality: bool = True
+    max_replicas_per_expert: int | None = None
+    probe_parallelism: int = 1       # >1 = beyond-paper k-ary probe search
+    ema_decay: float = 0.9           # EPLB stale-load estimator
+    rebalance_interval: int = 3      # EPLB refresh period (steps)
+
+
+def _finish_plan(lam: jax.Array, u: jax.Array, q: jax.Array, home: jax.Array,
+                 n_slot: int) -> Plan:
+    R = lam.shape[0]
+    x = planner.slot_assignment(u, home, n_slot)
+    hosted = (u.T > 0) | jax.nn.one_hot(home, R, dtype=jnp.bool_).T
+    lam_e = lam.sum(axis=0).astype(_I32)
+    ell = jnp.zeros((R,), _I32).at[home].add(lam_e)
+    return Plan(
+        u=u.astype(_I32), q=q.astype(_I32), x=x,
+        tau=jnp.max(u.sum(axis=0)).astype(_I32), hosted=hosted,
+        pre_max=jnp.max(ell), post_max=jnp.max(u.sum(axis=0)),
+    )
+
+
+def no_balance_plan(lam: jax.Array, home: jax.Array, n_slot: int) -> Plan:
+    """Identity plan: every token goes to its expert's home rank."""
+    lam = lam.astype(_I32)
+    R, E = lam.shape
+    u = (jax.nn.one_hot(home, R, dtype=_I32) * lam.sum(axis=0)[:, None]).astype(_I32)
+    # q[r, e, t] = lam[r, e] iff t == home[e]
+    q = lam[:, :, None] * jax.nn.one_hot(home, R, dtype=_I32)[None, :, :]
+    return _finish_plan(lam, u, q, home, n_slot)
+
+
+def solve(
+    lam: jax.Array,
+    home: jax.Array,
+    cfg: BalancerConfig,
+    *,
+    lam_e_est: jax.Array | None = None,
+) -> Plan:
+    """Dispatch on ``cfg.mode``.  Jittable for all non-lplb modes.
+
+    ``lam_e_est`` feeds the stale estimator for mode="eplb" (ignored
+    elsewhere); passing None falls back to exact load (== eplb_plus).
+    """
+    lam = lam.astype(_I32)
+    home = home.astype(_I32)
+    R, E = lam.shape
+
+    if cfg.mode in ("none", "ideal"):
+        return no_balance_plan(lam, home, cfg.n_slot)
+
+    if cfg.mode == "ultraep":
+        return planner.solve_plan(
+            lam,
+            home,
+            n_slot=cfg.n_slot,
+            u_min=cfg.u_min,
+            locality=cfg.locality,
+            max_replicas_per_expert=cfg.max_replicas_per_expert,
+            probe_parallelism=cfg.probe_parallelism,
+        )
+
+    if cfg.mode in ("eplb", "eplb_plus"):
+        est = lam.sum(axis=0).astype(jnp.float32)
+        if cfg.mode == "eplb" and lam_e_est is not None:
+            est = lam_e_est.astype(jnp.float32)
+        hosted = eplb_replication_jit(
+            est, home, R, n_slot=cfg.n_slot,
+            max_replicas_per_expert=cfg.max_replicas_per_expert,
+        )  # (E, R)
+        q = round_robin_reroute_jax(lam, hosted)
+        u = q.sum(axis=0).astype(_I32)
+        return _finish_plan(lam, u, q, home, cfg.n_slot)
+
+    if cfg.mode == "lplb":
+        import numpy as np
+
+        from repro.core.lplb import lplb_plan
+
+        est = None if lam_e_est is None else np.asarray(lam_e_est)
+        u, hosted, _tau = lplb_plan(np.asarray(lam), np.asarray(home),
+                                    cfg.n_slot, est)
+        # LPLB's waterfill already fixed the instance loads u; decompose the
+        # source-wise split with the same NW-corner rule the quota path uses.
+        qj = planner.solve_reroute(lam, jnp.asarray(u, dtype=_I32),
+                                   locality=cfg.locality)
+        return _finish_plan(lam, jnp.asarray(u, dtype=_I32), qj, home, cfg.n_slot)
+
+    raise ValueError(f"unknown balancer mode: {cfg.mode}")

@@ -1,0 +1,182 @@
+"""RSN-native balancing-communication planning (paper S6).
+
+On GPU rack-scale nodes the paper executes expert-state transfers with
+persistent tile-streaming kernels and two-stage chunk-streaming relay trees.
+On TPU the wire is owned by XLA collectives, so this module plays two roles:
+
+1. **Schedule construction** (``build_relay_schedule``): the paper's
+   load-aware relay algorithm (S6.2) verbatim -- relay frontier ~ sqrt(F),
+   relays picked from the expert's replica ranks with the smallest current
+   send volume, leaves attached to keep projected volumes minimal.
+
+2. **alpha-beta simulation** (``simulate``): an event-driven chunk-level
+   model of per-rank send/receive channels that reproduces the Fig. 16
+   behaviour (near-constant latency under relay vs linear fan-out growth
+   without), and is also used to size the tile/chunk knobs of the in-graph
+   transfer (``repro.moe.distribute``).
+
+The in-graph data plane itself (reduce-scatter of one-hot-selected expert
+tiles) lives in :mod:`repro.moe.distribute`; DESIGN.md S2 records the
+mechanism translation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+
+import numpy as np
+
+__all__ = ["Edge", "RelaySchedule", "build_relay_schedule", "simulate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Edge:
+    """One expert-state transfer edge."""
+
+    src: int
+    dst: int
+    expert: int
+    nbytes: int
+    stage: int          # 0 = direct/stage-one, 1 = relay stage-two
+    depends_on: int = -1  # index of the stage-one edge this leaf waits on
+
+
+@dataclasses.dataclass
+class RelaySchedule:
+    edges: list[Edge]
+    send_volume: np.ndarray  # (R,) planned bytes leaving each rank
+
+    @property
+    def max_send_volume(self) -> int:
+        return int(self.send_volume.max()) if self.send_volume.size else 0
+
+
+def build_relay_schedule(
+    hosted: np.ndarray,
+    home: np.ndarray,
+    expert_bytes: int,
+    *,
+    relay_threshold: int = 3,
+    num_ranks: int | None = None,
+) -> RelaySchedule:
+    """Load-aware relay-tree construction (paper S6.2).
+
+    Args:
+      hosted: (E, R) bool physical-instance indicator (mains + replicas).
+      home: (E,) home rank per expert.
+      expert_bytes: weight (or gradient) bytes of one expert.
+      relay_threshold: fan-outs strictly above this get a two-stage relay.
+
+    Returns a :class:`RelaySchedule` with per-chunk dependencies encoded at
+    edge granularity (chunk pipelining is applied by :func:`simulate`).
+    """
+    hosted = np.asarray(hosted, dtype=bool)
+    home = np.asarray(home, dtype=np.int64)
+    E, R = hosted.shape
+    R = num_ranks or R
+
+    send_volume = np.zeros(R, dtype=np.int64)
+    edges: list[Edge] = []
+
+    # Pass 1: direct sends for small fan-outs seed the volume tracker.
+    replica_sets: list[tuple[int, np.ndarray]] = []
+    for e in range(E):
+        dsts = np.where(hosted[e])[0]
+        dsts = dsts[dsts != home[e]]
+        if len(dsts) == 0:
+            continue
+        if len(dsts) <= relay_threshold:
+            for t in dsts:
+                edges.append(Edge(int(home[e]), int(t), e, expert_bytes, 0))
+            send_volume[home[e]] += expert_bytes * len(dsts)
+        else:
+            replica_sets.append((e, dsts))
+
+    # Pass 2: relay-eligible hot experts, descending fan-out.
+    replica_sets.sort(key=lambda it: (-len(it[1]), it[0]))
+    for e, dsts in replica_sets:
+        fanout = len(dsts)
+        n_relay = max(1, min(fanout, round(math.sqrt(fanout))))
+        # Relays: replica ranks with the smallest current send volume.
+        order = sorted(dsts.tolist(), key=lambda t: (send_volume[t], t))
+        relays = order[:n_relay]
+        leaves = order[n_relay:]
+
+        src = int(home[e])
+        relay_edge_idx = {}
+        for t in relays:
+            relay_edge_idx[t] = len(edges)
+            edges.append(Edge(src, int(t), e, expert_bytes, 0))
+        send_volume[src] += expert_bytes * n_relay
+
+        # Leaves attach to the relay whose projected volume stays smallest.
+        proj = {t: send_volume[t] for t in relays}
+        for leaf in leaves:
+            t = min(relays, key=lambda x: (proj[x], x))
+            edges.append(
+                Edge(int(t), int(leaf), e, expert_bytes, 1, relay_edge_idx[t])
+            )
+            proj[t] += expert_bytes
+        for t in relays:
+            send_volume[t] = proj[t]
+
+    return RelaySchedule(edges=edges, send_volume=send_volume)
+
+
+def simulate(
+    schedule: RelaySchedule,
+    *,
+    num_ranks: int,
+    link_bandwidth: float,
+    alpha: float = 2e-6,
+    chunk_bytes: int = 1 << 20,
+) -> float:
+    """Event-driven chunk-level alpha-beta simulation of the schedule.
+
+    Each rank has one send channel and one receive channel; a chunk occupies
+    its channel for ``alpha + chunk/beta`` seconds.  A stage-two (leaf) chunk
+    may start only after the *same chunk index* arrived at the relay (the
+    paper's per-chunk ready flag, Fig. 10).  Returns the makespan in seconds.
+    """
+    beta = link_bandwidth
+    send_free = np.zeros(num_ranks)
+    recv_free = np.zeros(num_ranks)
+
+    # Expand edges into chunks; keep per-(edge, chunk) arrival times.
+    n_chunks = {
+        i: max(1, -(-e.nbytes // chunk_bytes)) for i, e in enumerate(schedule.edges)
+    }
+    arrival: dict[tuple[int, int], float] = {}
+
+    # Priority queue of (ready_time, order, edge_idx, chunk_idx).
+    pq: list[tuple[float, int, int, int]] = []
+    order = 0
+    for i, e in enumerate(schedule.edges):
+        if e.stage == 0:
+            for c in range(n_chunks[i]):
+                heapq.heappush(pq, (0.0, order, i, c))
+                order += 1
+
+    pending_leaves: dict[int, list[int]] = {}
+    for i, e in enumerate(schedule.edges):
+        if e.stage == 1:
+            pending_leaves.setdefault(e.depends_on, []).append(i)
+
+    makespan = 0.0
+    while pq:
+        ready, _, i, c = heapq.heappop(pq)
+        e = schedule.edges[i]
+        this_bytes = min(chunk_bytes, e.nbytes - c * chunk_bytes)
+        start = max(ready, send_free[e.src], recv_free[e.dst])
+        finish = start + alpha + this_bytes / beta
+        send_free[e.src] = finish
+        recv_free[e.dst] = finish
+        arrival[(i, c)] = finish
+        makespan = max(makespan, finish)
+        # Wake dependent stage-two chunks of the same chunk index.
+        for leaf_idx in pending_leaves.get(i, ()):  # leaf shares chunking
+            heapq.heappush(pq, (finish, order, leaf_idx, c))
+            order += 1
+    return makespan

@@ -1,0 +1,222 @@
+"""EPLB and EPLB+ baselines (paper S8.1), adapted to the fixed-mains layout.
+
+EPLB (DeepSeek's Expert Parallelism Load Balancer) decides *replica counts*
+from a load estimate and packs instances greedily; token reroute is a
+separate round-robin split.  The paper's baselines:
+
+  * **EPLB**  -- replica placement from *historical* (EMA) load, refreshed
+    every ``interval`` steps; round-robin reroute on realized load.
+  * **EPLB+** -- same placement algorithm but fed the *exact* post-gating
+    load each microbatch (isolates quota-solving benefit from load fidelity);
+    round-robin reroute.
+
+Our adaptation (documented in DESIGN.md): main experts are immutable (the
+UltraEP layout), so EPLB here only chooses replicas into the ``N_slot``
+redundant slots -- the same decision space the quota planner gets.
+
+Both a numpy implementation (benchmarks, simulations) and the round-robin
+reroute in jittable JAX (for in-graph EPLB+ execution) are provided.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "eplb_replication",
+    "eplb_replication_jit",
+    "round_robin_reroute",
+    "round_robin_reroute_jax",
+    "eplb_plan",
+    "LoadEMA",
+]
+
+_I32 = jnp.int32
+
+
+def eplb_replication(
+    lam_e: np.ndarray,
+    home: np.ndarray,
+    n_slot: int,
+    max_replicas_per_expert: int | None = None,
+) -> np.ndarray:
+    """Greedy redundant-expert placement on estimated per-expert load.
+
+    Repeatedly replicates the expert with the highest per-instance load
+    (lam_e / |H(e)|) onto the admissible rank with the lowest estimated load,
+    until all R*N_slot redundant slots are used or no placement is possible.
+
+    Returns ``hosted``: (E, R) bool instance indicator (mains included).
+    """
+    lam_e = np.asarray(lam_e, dtype=np.float64)
+    home = np.asarray(home, dtype=np.int64)
+    E = lam_e.shape[0]
+    R = int(home.max()) + 1 if home.size else 0
+    max_rep = R if max_replicas_per_expert is None else max_replicas_per_expert + 1
+
+    hosted = np.zeros((E, R), dtype=bool)
+    hosted[np.arange(E), home] = True
+    slots_used = np.zeros(R, dtype=np.int64)
+    counts = np.ones(E, dtype=np.int64)
+    eligible = np.ones(E, dtype=bool)
+    budget = R * n_slot
+
+    while budget > 0 and eligible.any():
+        per_inst = np.where(eligible, lam_e / counts, -1.0)
+        e = int(np.argmax(per_inst))
+        if per_inst[e] <= 0:
+            break
+        adm = (slots_used < n_slot) & (~hosted[e])
+        if not adm.any() or counts[e] >= max_rep:
+            eligible[e] = False
+            continue
+        # Rank with the lowest estimated load (per-instance loads summed).
+        est = hosted.T @ (lam_e / counts)  # (R,)
+        est = np.where(adm, est, np.inf)
+        t = int(np.argmin(est))
+        hosted[e, t] = True
+        slots_used[t] += 1
+        counts[e] += 1
+        budget -= 1
+    return hosted
+
+
+def round_robin_reroute(lam: np.ndarray, hosted: np.ndarray) -> np.ndarray:
+    """EPLB-style round-robin token split across an expert's instances.
+
+    ``q[r, e, t] = lam[r, e] // n_e`` plus one extra token to the first
+    ``lam[r, e] % n_e`` hosts in an order rotated by the source rank (the
+    standard deployment heuristic: spread remainders deterministically).
+    """
+    lam = np.asarray(lam, dtype=np.int64)
+    hosted = np.asarray(hosted, dtype=bool)
+    R, E = lam.shape
+    q = np.zeros((R, E, R), dtype=np.int64)
+    for e in range(E):
+        hosts = np.where(hosted[e])[0]
+        n = len(hosts)
+        for r in range(R):
+            v = lam[r, e]
+            base, rem = divmod(v, n)
+            q[r, e, hosts] = base
+            if rem:
+                start = r % n
+                sel = hosts[(start + np.arange(rem)) % n]
+                q[r, e, sel] += 1
+    return q
+
+
+def round_robin_reroute_jax(lam: jax.Array, hosted: jax.Array) -> jax.Array:
+    """Jittable round-robin reroute (same semantics as the numpy version)."""
+    lam = lam.astype(_I32)
+    hosted = hosted.astype(jnp.bool_)  # (E, R)
+    R, E = lam.shape
+    n_e = hosted.sum(axis=1).astype(_I32)  # (E,)
+    # Position of each host within its expert's host list (by rank id).
+    pos = jnp.cumsum(hosted.astype(_I32), axis=1) - 1  # (E, R), valid where hosted
+    lamT = lam  # (R_src, E)
+    base = (lamT // n_e[None, :])[:, :, None] * hosted[None, :, :]
+    rem = (lamT % n_e[None, :])[:, :, None]  # (R_src, E, 1)
+    start = jnp.arange(R, dtype=_I32)[:, None] % jnp.maximum(n_e, 1)[None, :]
+    # Host h gets an extra token iff (pos - start) mod n_e < rem.
+    rel = (pos[None, :, :] - start[:, :, None]) % jnp.maximum(n_e, 1)[None, :, None]
+    extra = jnp.where(hosted[None, :, :] & (rel < rem), 1, 0)
+    return (base + extra).astype(_I32)
+
+
+def _eplb_replication_jax(
+    lam_e: jax.Array,
+    home: jax.Array,
+    num_ranks: int,
+    *,
+    n_slot: int,
+    max_replicas_per_expert: int | None = None,
+) -> jax.Array:
+    """Jittable greedy EPLB placement. Returns hosted (E, R) bool."""
+    lam_e = lam_e.astype(jnp.float32)
+    home = home.astype(_I32)
+    E = lam_e.shape[0]
+    R = num_ranks
+    max_rep = R if max_replicas_per_expert is None else max_replicas_per_expert + 1
+
+    hosted0 = jax.nn.one_hot(home, R, dtype=jnp.bool_)
+    init = (
+        hosted0,
+        jnp.zeros((R,), _I32),           # slots_used
+        jnp.ones((E,), _I32),            # counts
+        jnp.ones((E,), jnp.bool_),       # eligible
+        jnp.array(R * n_slot, _I32),     # budget
+    )
+
+    def cond(state):
+        _, _, _, eligible, budget = state
+        return (budget > 0) & eligible.any()
+
+    def body(state):
+        hosted, slots, counts, eligible, budget = state
+        per_inst = jnp.where(eligible, lam_e / counts, -1.0)
+        e = jnp.argmax(per_inst).astype(_I32)
+        adm = (slots < n_slot) & (~hosted[e])
+        feasible = adm.any() & (counts[e] < max_rep) & (per_inst[e] > 0)
+        est = hosted.T.astype(jnp.float32) @ (lam_e / counts)
+        t = jnp.argmin(jnp.where(adm, est, jnp.inf)).astype(_I32)
+        hosted = hosted.at[e, t].set(hosted[e, t] | feasible)
+        slots = slots.at[t].add(jnp.where(feasible, 1, 0).astype(_I32))
+        counts = counts.at[e].add(jnp.where(feasible, 1, 0).astype(_I32))
+        eligible = eligible.at[e].set(eligible[e] & feasible)
+        budget = budget - jnp.where(feasible, 1, 0).astype(_I32)
+        return hosted, slots, counts, eligible, budget
+
+    hosted, *_ = jax.lax.while_loop(cond, body, init)
+    return hosted
+
+
+# Public jittable entry point (R passed statically).
+def eplb_replication_jit(lam_e, home, num_ranks, *, n_slot,
+                         max_replicas_per_expert=None):
+    return _eplb_replication_jax(
+        lam_e, home, num_ranks, n_slot=n_slot,
+        max_replicas_per_expert=max_replicas_per_expert,
+    )
+
+
+class LoadEMA:
+    """Exponential-moving-average per-expert load tracker (EPLB's estimator)."""
+
+    def __init__(self, num_experts: int, decay: float = 0.9):
+        self.decay = decay
+        self.value = np.zeros(num_experts, dtype=np.float64)
+        self._initialized = False
+
+    def update(self, lam_e: np.ndarray) -> np.ndarray:
+        lam_e = np.asarray(lam_e, dtype=np.float64)
+        if not self._initialized:
+            self.value = lam_e.copy()
+            self._initialized = True
+        else:
+            self.value = self.decay * self.value + (1 - self.decay) * lam_e
+        return self.value
+
+
+def eplb_plan(
+    lam: np.ndarray,
+    home: np.ndarray,
+    n_slot: int,
+    lam_e_est: np.ndarray | None = None,
+    max_replicas_per_expert: int | None = None,
+):
+    """Full EPLB(+) baseline plan: placement + round-robin reroute.
+
+    ``lam_e_est=None`` means exact load (EPLB+); otherwise the stale estimate
+    drives placement while reroute always acts on the realized ``lam``.
+    Returns ``(u, q, hosted)``.
+    """
+    lam = np.asarray(lam, dtype=np.int64)
+    est = lam.sum(axis=0).astype(np.float64) if lam_e_est is None else lam_e_est
+    hosted = eplb_replication(est, home, n_slot, max_replicas_per_expert)
+    q = round_robin_reroute(lam, hosted)
+    u = q.sum(axis=0).astype(np.int64)  # (E, R) realized instance loads
+    return u, q, hosted

@@ -1,0 +1,104 @@
+"""Expert layout: logical<->physical mapping (paper S4.1).
+
+Every rank owns ``E/R`` *main* slots (immutable home placement, contiguous
+blocks: ``h(e) = e // (E/R)``) plus ``N_slot`` *redundant* slots.  A solved
+plan binds each redundant slot to a logical expert for one (layer,
+microbatch); the binding is re-derived every microbatch, and -- matching the
+paper's cross-layer buffer reuse -- redundant weight storage is transient
+(re-gathered per layer, never checkpointed, no optimizer state).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ExpertLayout", "physical_slot_of"]
+
+_I32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpertLayout:
+    """Static layout metadata for one EP group."""
+
+    num_experts: int          # E, logical experts
+    ep_size: int              # R, ranks in the EP group
+    n_slot: int               # redundant slots per rank
+
+    def __post_init__(self):
+        if self.num_experts % self.ep_size != 0:
+            raise ValueError(
+                f"num_experts={self.num_experts} must divide by ep={self.ep_size}"
+            )
+
+    @property
+    def experts_per_rank(self) -> int:
+        return self.num_experts // self.ep_size
+
+    @property
+    def slots_per_rank(self) -> int:
+        """Main + redundant physical slots per rank."""
+        return self.experts_per_rank + self.n_slot
+
+    def home(self) -> jax.Array:
+        """(E,) home rank of each logical expert (contiguous blocks)."""
+        return jnp.repeat(
+            jnp.arange(self.ep_size, dtype=_I32), self.experts_per_rank
+        )
+
+    def main_experts(self, rank) -> jax.Array:
+        """(E/R,) logical ids of the mains on ``rank``."""
+        base = rank * self.experts_per_rank
+        return base + jnp.arange(self.experts_per_rank, dtype=_I32)
+
+    def slot_expert_table(self, x: jax.Array) -> jax.Array:
+        """(R, slots_per_rank) logical expert id per physical slot.
+
+        Mains occupy slots [0, E/R); redundant slots follow in x-order.
+        Empty redundant slots hold -1.
+        """
+        R = self.ep_size
+        mains = (
+            jnp.arange(R, dtype=_I32)[:, None] * self.experts_per_rank
+            + jnp.arange(self.experts_per_rank, dtype=_I32)[None, :]
+        )
+        return jnp.concatenate([mains, x.astype(_I32)], axis=1)
+
+
+def physical_slot_of(layout: ExpertLayout, x: jax.Array) -> jax.Array:
+    """(R, E) physical slot index of expert e on rank r, -1 if not hosted.
+
+    Mains map to their static slot; replicas map to ``E/R + s`` where ``s`` is
+    the redundant slot bound by the plan's slot assignment ``x``.
+    """
+    R, E = layout.ep_size, layout.num_experts
+    epr = layout.experts_per_rank
+    home = jnp.arange(E, dtype=_I32) // epr
+    slot = jnp.full((R, E), -1, _I32)
+    # Main slots.
+    ranks = jnp.arange(R, dtype=_I32)
+    main_slot = jnp.where(
+        home[None, :] == ranks[:, None],
+        (jnp.arange(E, dtype=_I32) % epr)[None, :],
+        -1,
+    )
+    slot = jnp.maximum(slot, main_slot)
+
+    # Redundant slots from x: x[r, s] = e  =>  slot[r, e] = epr + s.
+    def fill_rank(row):
+        def fill_slot(sl, s):
+            e = row[s]
+            return jax.lax.cond(
+                e >= 0, lambda sl: sl.at[e].set(epr + s), lambda sl: sl, sl
+            ), None
+
+        out, _ = jax.lax.scan(
+            fill_slot, jnp.full((E,), -1, _I32), jnp.arange(layout.n_slot)
+        )
+        return out
+
+    red = jax.vmap(fill_rank)(x.astype(_I32))
+    return jnp.where(red >= 0, red, slot)

@@ -1,0 +1,218 @@
+"""Pure-numpy reference implementation of UltraEP's quota-driven planner.
+
+This is the readable oracle for Algorithm 1 of the paper ("Replication &
+Reroute Joint Solving").  The jittable device version in
+:mod:`repro.core.planner` must agree with this one bit-for-bit on integer
+loads; hypothesis property tests enforce that.
+
+Terminology (Table 1 of the paper):
+  * ``lam``   -- global load matrix Lambda, shape (R, E); ``lam[r, e]`` is the
+                 number of tokens on source rank ``r`` routed to logical
+                 expert ``e`` by the gate.
+  * ``home``  -- home rank h(e) of each logical expert, shape (E,).
+  * ``u``     -- solved quota table U, shape (E, R); ``u[e, t] > 0`` iff rank
+                 ``t`` hosts a physical instance of ``e`` carrying that many
+                 post-reroute tokens.
+  * ``q``     -- reroute split Q, shape (R, E, R); ``q[r, e, t]`` tokens of
+                 (source r, expert e) sent to the instance on rank ``t``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "RefPlan",
+    "solve_replication",
+    "solve_reroute",
+    "solve",
+    "slot_assignment",
+]
+
+
+@dataclasses.dataclass
+class RefPlan:
+    """Output of the reference solver."""
+
+    u: np.ndarray          # (E, R) int64 quota table
+    q: np.ndarray          # (R, E, R) int64 reroute split
+    tau: int               # solved threshold (max post-balance rank load)
+    feasible_tau: bool     # True if tau < initial max rank load (i.e. improved)
+    x: np.ndarray          # (R, N_slot) int64 slot assignment, -1 = empty
+
+
+def _initial_quota(lam: np.ndarray, home: np.ndarray) -> np.ndarray:
+    """All load on the main instance: u[e, h(e)] = lam_e."""
+    R, E = lam.shape
+    u = np.zeros((E, R), dtype=np.int64)
+    lam_e = lam.sum(axis=0)
+    u[np.arange(E), home] = lam_e
+    return u
+
+
+def _greedy_oracle(
+    lam_e: np.ndarray,
+    ell: np.ndarray,
+    home: np.ndarray,
+    tau: int,
+    n_slot: int,
+    u_min: int,
+    max_replicas_per_expert: int | None = None,
+):
+    """Feasibility oracle for threshold ``tau`` (Alg. 1 lines 6-19).
+
+    Returns ``(feasible, u)`` where ``u`` is the tentative quota table.
+    Deterministic: ties in sort orders are broken by ascending index.
+    """
+    E = lam_e.shape[0]
+    R = ell.shape[0]
+    exc = np.maximum(ell - tau, 0).astype(np.int64)
+    slk = np.maximum(tau - ell, 0).astype(np.int64)
+    u = np.zeros((E, R), dtype=np.int64)
+    u[np.arange(E), home] = lam_e
+    slots_used = np.zeros(R, dtype=np.int64)
+    hosted = np.zeros((R, E), dtype=bool)
+    hosted[home, np.arange(E)] = True
+    n_replicas = np.zeros(E, dtype=np.int64)
+
+    # Overloaded ranks in descending initial excess (stable tie-break by id).
+    rank_order = np.argsort(-exc, kind="stable")
+    for r in rank_order:
+        if exc[r] <= 0:
+            continue
+        # Main experts of r in descending total load (stable).
+        mine = np.where(home == r)[0]
+        mine = mine[np.argsort(-lam_e[mine], kind="stable")]
+        for e in mine:
+            if exc[r] <= 0:
+                break
+            cap = u[e, r]  # remaining transferable load still at home
+            while exc[r] > 0 and cap > 0:
+                if (
+                    max_replicas_per_expert is not None
+                    and n_replicas[e] >= max_replicas_per_expert
+                ):
+                    break
+                # Admissible targets: positive slack, free slot, no duplicate.
+                adm = (slk > 0) & (slots_used < n_slot) & (~hosted[:, e])
+                if not adm.any():
+                    break
+                # argmax slack, tie-break by lowest rank id.
+                cand = np.where(adm)[0]
+                t = cand[np.argmax(slk[cand])]
+                delta = min(exc[r], slk[t], cap)
+                if delta < u_min:
+                    break
+                u[e, r] -= delta
+                u[e, t] += delta
+                exc[r] -= delta
+                slk[t] -= delta
+                cap -= delta
+                slots_used[t] += 1
+                hosted[t, e] = True
+                n_replicas[e] += 1
+    return bool((exc == 0).all()), u
+
+
+def solve_replication(
+    lam: np.ndarray,
+    home: np.ndarray,
+    n_slot: int,
+    u_min: int = 1,
+    max_replicas_per_expert: int | None = None,
+):
+    """Binary-search the smallest feasible threshold tau (Alg. 1 lines 1-25).
+
+    Returns ``(u, tau, improved)``.
+    """
+    lam = np.asarray(lam, dtype=np.int64)
+    home = np.asarray(home, dtype=np.int64)
+    R, E = lam.shape
+    lam_e = lam.sum(axis=0)
+    ell = np.zeros(R, dtype=np.int64)
+    np.add.at(ell, home, lam_e)
+
+    total = int(ell.sum())
+    tau_lo = -(-total // R)  # ceil(mean)
+    tau_hi = int(ell.max()) if R > 0 else 0
+    best_u = _initial_quota(lam, home)
+    best_tau = tau_hi
+    while tau_lo < tau_hi:
+        tau = (tau_lo + tau_hi) // 2
+        feasible, u = _greedy_oracle(
+            lam_e, ell, home, tau, n_slot, u_min, max_replicas_per_expert
+        )
+        if feasible:
+            best_u, best_tau = u, tau
+            tau_hi = tau
+        else:
+            tau_lo = tau + 1
+    return best_u, best_tau, best_tau < int(ell.max())
+
+
+def solve_reroute(lam: np.ndarray, u: np.ndarray, locality: bool = True) -> np.ndarray:
+    """Materialise the source-wise split Q consistent with quota table U.
+
+    Stage 1 (locality): tokens originating on a host rank consume that rank's
+    own quota first.  Stage 2: residual demand is matched to residual quota
+    with the (deterministic, marginal-exact) northwest-corner rule.  The paper
+    uses proportional-split-plus-rounding for stage 2; NW-corner preserves the
+    identical row/column marginals -- which is all the balance objective sees
+    -- and is exactly vectorisable on TPU (see DESIGN.md hardware notes).
+    """
+    lam = np.asarray(lam, dtype=np.int64)
+    u = np.asarray(u, dtype=np.int64)
+    R, E = lam.shape
+    q = np.zeros((R, E, R), dtype=np.int64)
+
+    for e in range(E):
+        demand = lam[:, e].copy()   # (R,) residual demand per source
+        quota = u[e, :].copy()      # (R,) residual quota per host
+        if locality:
+            local = np.minimum(demand, quota)
+            q[np.arange(R), e, np.arange(R)] = local
+            demand -= local
+            quota -= local
+        # NW-corner on the residual transportation problem.
+        a = np.concatenate([[0], np.cumsum(demand)])
+        b = np.concatenate([[0], np.cumsum(quota)])
+        for r in range(R):
+            if demand[r] == 0:
+                continue
+            lo_r, hi_r = a[r], a[r + 1]
+            fill = np.maximum(
+                0, np.minimum(hi_r, b[1:]) - np.maximum(lo_r, b[:-1])
+            )
+            q[r, e, :] += fill
+    return q
+
+
+def slot_assignment(u: np.ndarray, home: np.ndarray, n_slot: int) -> np.ndarray:
+    """Derive the redundant-slot map X from the quota table (expert-id order)."""
+    E, R = u.shape
+    x = np.full((R, n_slot), -1, dtype=np.int64)
+    for t in range(R):
+        s = 0
+        for e in range(E):
+            if u[e, t] > 0 and home[e] != t:
+                x[t, s] = e
+                s += 1
+    return x
+
+
+def solve(
+    lam: np.ndarray,
+    home: np.ndarray,
+    n_slot: int,
+    u_min: int = 1,
+    locality: bool = True,
+    max_replicas_per_expert: int | None = None,
+) -> RefPlan:
+    u, tau, improved = solve_replication(
+        lam, home, n_slot, u_min, max_replicas_per_expert
+    )
+    q = solve_reroute(lam, u, locality=locality)
+    x = slot_assignment(u, np.asarray(home), n_slot)
+    return RefPlan(u=u, q=q, tau=int(tau), feasible_tau=improved, x=x)

@@ -1,0 +1,5 @@
+"""Data pipeline: deterministic synthetic LM stream with domain mixture."""
+
+from repro.data.pipeline import DataConfig, SyntheticLMStream
+
+__all__ = ["DataConfig", "SyntheticLMStream"]

@@ -1,0 +1,21 @@
+"""Oracle for fused gating: softmax/sigmoid + top-k + per-expert histogram."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gating_topk_ref"]
+
+
+def gating_topk_ref(logits: jax.Array, k: int, *, score_fn: str = "softmax"):
+    """logits: (T, E) fp32.  Returns (ids (T,k) i32, weights (T,k) f32,
+    counts (E,) i32).  Weights are the raw selected scores (caller
+    normalises)."""
+    if score_fn == "softmax":
+        scores = jax.nn.softmax(logits, axis=-1)
+    else:
+        scores = jax.nn.sigmoid(logits)
+    w, ids = jax.lax.top_k(scores, k)
+    counts = jnp.zeros((logits.shape[1],), jnp.int32).at[ids.reshape(-1)].add(1)
+    return ids.astype(jnp.int32), w, counts

@@ -1,0 +1,69 @@
+"""Grouped GEMM Pallas kernel: per-expert-slot batched matmul.
+
+The MoE expert FFN executes one (C x K) @ (K x N) per physical expert slot.
+On TPU we tile (M, N, K) so each block's working set sits in VMEM and the
+MXU sees 128-aligned contractions:
+
+  grid = (G, M/bm, N/bn, K/bk)   -- K innermost for accumulation
+  x block  (1, bm, bk), w block (1, bk, bn), out block (1, bm, bn)
+
+The fp32 accumulator lives in a VMEM scratch buffer across the K steps
+(standard Pallas matmul pattern); the final K step casts to the output
+dtype.  Capacity-padded rows are zero on input, so no masking is needed
+inside the kernel (zeros contribute zeros).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["grouped_matmul_kernel", "grouped_matmul_pallas"]
+
+
+def grouped_matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[0], w_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(3) == k_steps - 1)
+    def _store():
+        o_ref[0, ...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret"))
+def grouped_matmul_pallas(x: jax.Array, w: jax.Array, *, bm: int = 128,
+                          bn: int = 128, bk: int = 128,
+                          interpret: bool = False) -> jax.Array:
+    """x: (G, M, K) @ w: (G, K, N) -> (G, M, N)."""
+    G, M, K = x.shape
+    _, _, N = w.shape
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    if M % bm or N % bn or K % bk:
+        raise ValueError(f"dims ({M},{N},{K}) not divisible by blocks "
+                         f"({bm},{bn},{bk})")
+    k_steps = K // bk
+    grid = (G, M // bm, N // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(grouped_matmul_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda g, i, j, k: (g, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda g, i, j, k: (g, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda g, i, j, k: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((G, M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

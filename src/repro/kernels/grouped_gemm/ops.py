@@ -1,0 +1,38 @@
+"""Public grouped-matmul op: Pallas on TPU, interpret mode elsewhere."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.grouped_gemm.kernel import grouped_matmul_pallas
+from repro.kernels.grouped_gemm.ref import grouped_matmul_ref
+
+__all__ = ["grouped_matmul"]
+
+
+def _pad_to(v: int, m: int) -> int:
+    return -(-v // m) * m
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array, *, bm: int = 128,
+                   bn: int = 128, bk: int = 128) -> jax.Array:
+    """Grouped matmul with automatic padding to block multiples.
+
+    Uses the Pallas kernel on TPU backends, interpret mode on CPU (same
+    kernel body, Python evaluation).  Falls back to the jnp oracle for
+    shapes too small to tile profitably.
+    """
+    G, M, K = x.shape
+    _, _, N = w.shape
+    if M * N * K < 128 ** 3:  # tiny: tiling overhead dominates
+        return grouped_matmul_ref(x, w)
+    interpret = jax.default_backend() != "tpu"
+    bm2, bn2, bk2 = min(bm, _pad_to(M, 8)), min(bn, _pad_to(N, 128)), \
+        min(bk, _pad_to(K, 128))
+    Mp, Np, Kp = _pad_to(M, bm2), _pad_to(N, bn2), _pad_to(K, bk2)
+    xp = jnp.pad(x, ((0, 0), (0, Mp - M), (0, Kp - K)))
+    wp = jnp.pad(w, ((0, 0), (0, Kp - K), (0, Np - N)))
+    out = grouped_matmul_pallas(xp, wp, bm=bm2, bn=bn2, bk=bk2,
+                                interpret=interpret)
+    return out[:, :M, :N]

@@ -1,0 +1,15 @@
+"""Oracle for the grouped GEMM: per-group dense matmul."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["grouped_matmul_ref"]
+
+
+def grouped_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (G, M, K); w: (G, K, N) -> (G, M, N), fp32 accumulation."""
+    out = jnp.einsum("gmk,gkn->gmn", x.astype(jnp.float32),
+                     w.astype(jnp.float32))
+    return out.astype(x.dtype)

@@ -1,0 +1,19 @@
+"""Oracle for the SSD intra-chunk kernel (mirrors models.ssm chunk math)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_chunk_ref"]
+
+
+def ssd_chunk_ref(xs, Bm, Cm, dt, da, initial_state=None):
+    """Chunked SSD (same semantics as models.ssm._ssd_chunk_scan_ref).
+
+    xs: (B, nc, Q, H, P); Bm/Cm: (B, nc, Q, H, N); dt/da: (B, nc, Q, H).
+    Returns (y, final_state).
+    """
+    from repro.models.ssm import _ssd_chunk_scan_ref
+
+    return _ssd_chunk_scan_ref(xs, Bm, Cm, dt, da, initial_state)

@@ -1,0 +1,50 @@
+"""Production meshes.
+
+Single pod: 16x16 = 256 chips, axes (data, model).  Multi-pod: 2 pods =
+512 chips, axes (pod, data, model); the ``pod`` axis scales out with DP (or
+PP via :mod:`repro.parallel.pipeline`), matching the paper's intra-rack EP +
+inter-rack DP/PP layout.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_test_mesh", "pctx_for_mesh"]
+
+
+def _mesh(shape, axes):
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devs)} "
+            "(dry-runs must set --xla_force_host_platform_device_count "
+            "before jax initializes)")
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 2, model: int = 4):
+    """Small mesh for subprocess CPU tests (8 virtual devices)."""
+    return _mesh((data, model), ("data", "model"))
+
+
+def pctx_for_mesh(mesh):
+    from repro.models.transformer import ParallelCtx
+
+    axes = tuple(mesh.axis_names)
+    batch = tuple(a for a in axes if a != "model")
+    return ParallelCtx(mesh=mesh, batch_axes=batch, model_axis="model")

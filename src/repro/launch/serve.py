@@ -1,0 +1,89 @@
+"""Serving driver: chunked-prefill engine over a Poisson request trace.
+
+Example:
+  PYTHONPATH=src python -m repro.launch.serve --arch deepseek-v3-671b \
+      --reduce --requests 16 --rps 4 --chunk 64
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+import jax
+
+from repro.configs import get_config
+from repro.configs.reduce import reduced
+from repro.core.balancer import BalancerConfig
+from repro.models.model import init_lm
+from repro.models.transformer import ParallelCtx, RuntimeConfig
+from repro.serving.adapter import make_engine_fns
+from repro.serving.engine import EngineConfig, Request, ServingEngine
+
+__all__ = ["main", "serve_trace"]
+
+
+def serve_trace(arch: str, *, requests: int = 16, rps: float = 4.0,
+                chunk: int = 64, max_new: int = 8, reduce: bool = True,
+                balancer: str = "ultraep", seed: int = 0,
+                prompt_len: tuple[int, int] = (32, 200)):
+    cfg = get_config(arch)
+    if reduce:
+        cfg = reduced(cfg)
+    if not cfg.has_decode:
+        raise ValueError(f"{arch} is encoder-only; no serving path")
+    rcfg = RuntimeConfig(
+        balancer=BalancerConfig(mode=balancer,
+                                n_slot=cfg.moe.n_slot if cfg.moe else 2),
+        cf_pair=4.0, cf_slot=4.0, scan_layers=True, remat=False,
+    )
+    pctx = ParallelCtx(mesh=None)
+    params = init_lm(jax.random.PRNGKey(seed), cfg, rcfg, pctx)
+    max_seq = max(prompt_len[1] + max_new + chunk, 2 * chunk)
+    # SSM prefill chunks must align with the SSD chunk size.
+    if cfg.ssm is not None:
+        chunk = max(chunk - chunk % cfg.ssm.chunk, cfg.ssm.chunk)
+
+    prefill_fn, decode_fn, new_cache_fn, stack, unstack = make_engine_fns(
+        params, cfg, rcfg, pctx, max_seq=max_seq)
+    eng = ServingEngine(EngineConfig(chunk_size=chunk, decode_batch=4,
+                                     max_seq=max_seq),
+                        prefill_fn=prefill_fn, decode_fn=decode_fn,
+                        new_cache_fn=new_cache_fn, stack_caches=stack,
+                        unstack_caches=unstack)
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    for i in range(requests):
+        t += rng.exponential(1.0 / rps)
+        L = int(rng.integers(*prompt_len))
+        if cfg.ssm is not None:
+            L = max(cfg.ssm.chunk, L - L % cfg.ssm.chunk)
+        eng.submit(Request(rid=i, prompt=rng.integers(
+            0, cfg.vocab_size, size=L).astype(np.int32),
+            max_new_tokens=max_new, arrival=t))
+    done = eng.run()
+    ttft, tpot = eng.ttft(), eng.tpot()
+    print(f"served {len(done)} requests  mean TTFT {ttft.mean()*1e3:.1f}ms  "
+          f"p99 TTFT {np.percentile(ttft, 99)*1e3:.1f}ms  "
+          f"mean TPOT {tpot.mean()*1e3:.2f}ms")
+    return eng
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rps", type=float, default=4.0)
+    ap.add_argument("--chunk", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--reduce", action="store_true")
+    ap.add_argument("--balancer", default="ultraep")
+    args = ap.parse_args(argv)
+    serve_trace(args.arch, requests=args.requests, rps=args.rps,
+                chunk=args.chunk, max_new=args.max_new, reduce=args.reduce,
+                balancer=args.balancer)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""Model zoo: layers, attention (GQA/MLA), Mamba2 SSD, transformer assembly."""

@@ -1,0 +1,58 @@
+"""Shared building blocks: RMSNorm, rotary embeddings, dense FFN, embeddings."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "rotary_cos_sin", "apply_rotary", "dense_swiglu",
+           "embed", "unembed"]
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm in fp32 accumulation."""
+    xf = jnp.asarray(x, jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * jnp.asarray(scale, jnp.float32)
+    return out.astype(x.dtype)
+
+
+def rotary_cos_sin(positions: jax.Array, head_dim: int,
+                   theta: float = 10000.0) -> tuple[jax.Array, jax.Array]:
+    """(..., head_dim/2) cos/sin tables for the given positions."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rotary(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate pairs (x1, x2) -> (x1 cos - x2 sin, x1 sin + x2 cos).
+
+    x: (..., S, H, head_dim); cos/sin: (..., S, head_dim/2) broadcast over H.
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1).astype(
+        x.dtype
+    )
+
+
+def dense_swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array,
+                 w2: jax.Array) -> jax.Array:
+    """Dense-FFN SwiGLU (the non-MoE feed-forward)."""
+    return ((jax.nn.silu(x @ w1) * (x @ w3)) @ w2).astype(x.dtype)
+
+
+def embed(tokens: jax.Array, table: jax.Array) -> jax.Array:
+    """Token embedding lookup, (B, S) -> (B, S, D)."""
+    return jnp.take(table, tokens, axis=0)
+
+
+def unembed(x: jax.Array, table: jax.Array) -> jax.Array:
+    """Logits in fp32: (B, S, D) @ (V, D)^T."""
+    return jnp.einsum(
+        "bsd,vd->bsv", jnp.asarray(x, jnp.float32), jnp.asarray(table, jnp.float32)
+    )

@@ -1,0 +1,286 @@
+"""Mamba2 SSD (state-space duality) block: chunked scan + one-step decode.
+
+Implements the SSD algorithm of Dao & Gu (arXiv:2405.21060): within a chunk
+the recurrence is computed as a masked quadratic form (MXU-friendly); across
+chunks a small (H, dstate, headdim) state is carried by ``lax.scan``.  The
+Pallas ``ssd_scan`` kernel accelerates the intra-chunk part on TPU; this
+module is the XLA/oracle path.
+
+Decode keeps the constant-size SSM state -- this is why ``long_500k`` decode
+is O(1) in sequence length for mamba2/jamba (DESIGN.md S4 shape skips).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+__all__ = ["SSMConfig", "SSMParams", "SSMState", "init_ssm", "ssd_forward",
+           "ssd_decode"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_inner: int
+    headdim: int = 64
+    d_state: int = 128
+    n_groups: int = 1
+    d_conv: int = 4
+    chunk: int = 128
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.headdim
+
+
+class SSMParams(NamedTuple):
+    in_proj: jax.Array     # (D, 2*d_inner + 2*G*N + H)
+    conv_w: jax.Array      # (d_conv, conv_channels)
+    conv_b: jax.Array      # (conv_channels,)
+    a_log: jax.Array       # (H,)
+    d_skip: jax.Array      # (H,)
+    dt_bias: jax.Array     # (H,)
+    norm: jax.Array        # (d_inner,)
+    out_proj: jax.Array    # (d_inner, D)
+
+
+class SSMState(NamedTuple):
+    """Decode state: SSM state + conv tail."""
+
+    s: jax.Array           # (B, H, N, P) SSM state
+    conv: jax.Array        # (B, d_conv-1, conv_channels) trailing inputs
+    length: jax.Array      # () int32
+
+
+def _conv_channels(cfg: SSMConfig) -> int:
+    return cfg.d_inner + 2 * cfg.n_groups * cfg.d_state
+
+
+def init_ssm(key: jax.Array, cfg: SSMConfig, dtype=jnp.float32) -> SSMParams:
+    H = cfg.n_heads
+    cc = _conv_channels(cfg)
+    d_in_all = 2 * cfg.d_inner + 2 * cfg.n_groups * cfg.d_state + H
+    ks = jax.random.split(key, 3)
+    return SSMParams(
+        in_proj=jax.random.normal(ks[0], (cfg.d_model, d_in_all), dtype)
+        * cfg.d_model ** -0.5,
+        conv_w=jax.random.normal(ks[1], (cfg.d_conv, cc), dtype) * 0.1,
+        conv_b=jnp.zeros((cc,), dtype),
+        a_log=jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        d_skip=jnp.ones((H,), jnp.float32),
+        dt_bias=jnp.zeros((H,), jnp.float32),
+        norm=jnp.ones((cfg.d_inner,), dtype),
+        out_proj=jax.random.normal(ks[2], (cfg.d_inner, cfg.d_model), dtype)
+        * cfg.d_inner ** -0.5,
+    )
+
+
+def _split_proj(zxbcdt: jax.Array, cfg: SSMConfig):
+    di, G, N, H = cfg.d_inner, cfg.n_groups, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + di + 2 * G * N]
+    dt = zxbcdt[..., di + di + 2 * G * N :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: jax.Array | None = None):
+    """Depthwise causal conv1d.  xbc: (B, L, C); w: (K, C)."""
+    K = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((xbc.shape[0], K - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = tail
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i : i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(K))
+    return jax.nn.silu(out + b[None, None, :]), xp[:, -(K - 1):, :]
+
+
+def ssd_forward(
+    x: jax.Array,
+    params: SSMParams,
+    cfg: SSMConfig,
+    *,
+    use_kernel: bool = False,
+    initial_state: jax.Array | None = None,
+    unroll: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence SSD.  x: (B, L, D) with L % chunk == 0 (padded by caller).
+
+    Returns (y, final_state).
+    """
+    B, L, _ = x.shape
+    H, P, N, G, Q = cfg.n_heads, cfg.headdim, cfg.d_state, cfg.n_groups, cfg.chunk
+    zxbcdt = x @ params.in_proj
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc, _tail = _causal_conv(xbc, params.conv_w, params.conv_b)
+    xs = xbc[..., : cfg.d_inner].reshape(B, L, H, P)
+    Bm = xbc[..., cfg.d_inner : cfg.d_inner + G * N].reshape(B, L, G, N)
+    Cm = xbc[..., cfg.d_inner + G * N :].reshape(B, L, G, N)
+    # Broadcast groups over heads.
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)                       # (B, L, H, N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params.dt_bias)  # (B, L, H)
+    a = -jnp.exp(params.a_log)                             # (H,)
+    da = dt * a[None, None, :]                             # (B, L, H) log-decay
+
+    nc = L // Q
+    xs_c = xs.reshape(B, nc, Q, H, P)
+    B_c = Bh.reshape(B, nc, Q, H, N)
+    C_c = Ch.reshape(B, nc, Q, H, N)
+    dt_c = dt.reshape(B, nc, Q, H)
+    da_c = da.reshape(B, nc, Q, H)
+
+    if use_kernel:
+        from repro.kernels.ssd_scan import ops as ssd_ops
+
+        y, final = ssd_ops.ssd_chunk_scan(
+            xs_c, B_c, C_c, dt_c, da_c, initial_state=initial_state
+        )
+    else:
+        y, final = _ssd_chunk_scan_ref(xs_c, B_c, C_c, dt_c, da_c,
+                                       initial_state, unroll=unroll)
+    y = y.reshape(B, L, H, P)
+    y = y + xs * params.d_skip[None, None, :, None]
+    y = y.reshape(B, L, cfg.d_inner) * jax.nn.silu(z)
+    y = rms_norm(y, params.norm)
+    return (y @ params.out_proj).astype(x.dtype), final
+
+
+def _ssd_chunk_scan_ref(xs, Bm, Cm, dt, da, initial_state=None, unroll=False):
+    """Oracle SSD chunk scan.
+
+    Shapes: xs (B, nc, Q, H, P); Bm/Cm (B, nc, Q, H, N); dt/da (B, nc, Q, H).
+    Returns y (B, nc, Q, H, P), final state (B, H, N, P).
+    """
+    B, nc, Q, H, P = xs.shape
+    N = Bm.shape[-1]
+    cum = jnp.cumsum(da, axis=2)                            # (B,nc,Q,H)
+
+    # Intra-chunk quadratic term: masked decay attention.
+    # L[i,j] = exp(cum_i - cum_j) for j <= i.  The exponent is masked BEFORE
+    # exp so masked entries cannot overflow and poison gradients.
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,nc,Qi,Qj,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    decay = jnp.exp(jnp.where(mask, diff, -1e9))
+    cb = jnp.einsum("bcqhn,bckhn->bcqkh", Cm.astype(jnp.float32),
+                    Bm.astype(jnp.float32))
+    w = cb * decay * dt[:, :, None, :, :]                   # weight (i,j)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", w, xs.astype(jnp.float32))
+
+    # Chunk states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j^T.
+    last = cum[:, :, -1:, :]                                # (B,nc,1,H)
+    wj = jnp.exp(last - cum) * dt                           # (B,nc,Q,H)
+    S_c = jnp.einsum("bcqh,bcqhn,bcqhp->bchnp", wj,
+                     Bm.astype(jnp.float32), xs.astype(jnp.float32))
+    chunk_decay = jnp.exp(last[:, :, 0, :])                 # (B,nc,H)
+
+    def scan_fn(s_prev, blk):
+        s_new = s_prev * blk["decay"][:, :, None, None] + blk["S"]
+        return s_new, s_prev
+
+    init = (jnp.zeros((B, H, N, P), jnp.float32)
+            if initial_state is None else initial_state.astype(jnp.float32))
+    _final_in = {"S": jnp.moveaxis(S_c, 1, 0),
+                 "decay": jnp.moveaxis(chunk_decay, 1, 0)}
+    if unroll:
+        s_prev = init
+        prevs = []
+        for c in range(nc):
+            s_prev, prev = scan_fn(
+                s_prev, {"S": _final_in["S"][c], "decay": _final_in["decay"][c]})
+            prevs.append(prev)
+        final = s_prev
+        prev_states = jnp.stack(prevs, axis=1)               # (B,nc,H,N,P)
+    else:
+        final, prev_states = jax.lax.scan(scan_fn, init, _final_in)
+        prev_states = jnp.moveaxis(prev_states, 0, 1)       # (B,nc,H,N,P)
+
+    # Inter-chunk contribution: C_i exp(cum_i) S_{c-1}.
+    y_inter = jnp.einsum("bcqhn,bchnp->bcqhp",
+                         (Cm.astype(jnp.float32)
+                          * jnp.exp(cum)[..., None]), prev_states)
+    return (y_intra + y_inter), final
+
+
+def ssd_prefill(
+    x: jax.Array,
+    state: SSMState,
+    params: SSMParams,
+    cfg: SSMConfig,
+    *,
+    unroll: bool = False,
+) -> tuple[jax.Array, SSMState]:
+    """Chunked prefill: run a (B, C, D) chunk from the carried state.
+
+    C must be a multiple of cfg.chunk (callers pad).  Continues both the
+    SSM state and the conv tail.
+    """
+    B, C, _ = x.shape
+    zxbcdt = x @ params.in_proj
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc, new_tail = _causal_conv(xbc, params.conv_w, params.conv_b,
+                                 tail=state.conv)
+    H, P, N, G, Q = (cfg.n_heads, cfg.headdim, cfg.d_state, cfg.n_groups,
+                     cfg.chunk)
+    xs = xbc[..., : cfg.d_inner].reshape(B, C, H, P)
+    Bm = xbc[..., cfg.d_inner : cfg.d_inner + G * N].reshape(B, C, G, N)
+    Cm = xbc[..., cfg.d_inner + G * N :].reshape(B, C, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + params.dt_bias)
+    a = -jnp.exp(params.a_log)
+    da = dtv * a[None, None, :]
+    nc = C // Q
+    y, final = _ssd_chunk_scan_ref(
+        xs.reshape(B, nc, Q, H, P), Bh.reshape(B, nc, Q, H, N),
+        Ch.reshape(B, nc, Q, H, N), dtv.reshape(B, nc, Q, H),
+        da.reshape(B, nc, Q, H), initial_state=state.s, unroll=unroll)
+    y = y.reshape(B, C, H, P) + xs * params.d_skip[None, None, :, None]
+    y = y.reshape(B, C, cfg.d_inner) * jax.nn.silu(z)
+    y = rms_norm(y, params.norm)
+    return (y @ params.out_proj).astype(x.dtype), SSMState(
+        final, new_tail, state.length + C)
+
+
+def ssd_decode(
+    x: jax.Array,
+    state: SSMState,
+    params: SSMParams,
+    cfg: SSMConfig,
+) -> tuple[jax.Array, SSMState]:
+    """One-token decode.  x: (B, 1, D)."""
+    B = x.shape[0]
+    H, P, N, G = cfg.n_heads, cfg.headdim, cfg.d_state, cfg.n_groups
+    zxbcdt = x @ params.in_proj
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc, new_tail = _causal_conv(xbc, params.conv_w, params.conv_b,
+                                 tail=state.conv)
+    xs = xbc[..., : cfg.d_inner].reshape(B, H, P)
+    Bm = xbc[..., cfg.d_inner : cfg.d_inner + G * N].reshape(B, G, N)
+    Cm = xbc[..., cfg.d_inner + G * N :].reshape(B, G, N)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1)
+    Ch = jnp.repeat(Cm, rep, axis=1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32)[:, 0, :] + params.dt_bias)
+    a = -jnp.exp(params.a_log)
+    decay = jnp.exp(dtv * a[None, :])                       # (B, H)
+    s_new = (state.s * decay[:, :, None, None]
+             + jnp.einsum("bh,bhn,bhp->bhnp", dtv, Bh.astype(jnp.float32),
+                          xs.astype(jnp.float32)))
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), s_new)
+    y = y + xs * params.d_skip[None, :, None]
+    y = y.reshape(B, 1, cfg.d_inner) * jax.nn.silu(z)
+    y = rms_norm(y, params.norm)
+    return (y @ params.out_proj).astype(x.dtype), SSMState(
+        s_new, new_tail, state.length + 1
+    )

@@ -1,0 +1,1 @@
+"""MoE stack: gating, expert compute, EP dispatch, balanced MoE layer."""

@@ -1,0 +1,182 @@
+"""EP token dispatch/combine: capacity-bounded all-to-all under shard_map.
+
+This is the DeepEP analogue on TPU (DESIGN.md S2).  Per rank, inside
+``shard_map`` over the EP ("model") axis:
+
+  1. gate locally, all_gather per-expert counts -> exact load matrix Lambda;
+  2. solve the balancing plan (identical on every rank, zero extra sync --
+     the paper's "deterministically computes an identical plan");
+  3. reroute: per-item destination rank via cumulative-quota lookup;
+  4. dispatch: scatter items into fixed-capacity per-destination buffers and
+     ``all_to_all`` them across the EP group;
+  5. bucket received items into per-physical-slot buffers, grouped FFN;
+  6. inverse path: results return in the same buffer positions, so the
+     combine is a gather + weighted sum with no extra metadata exchange
+     (the paper's "scatter-to-gather inversion").
+
+Static shapes: ``cap_pair`` bounds tokens per (src, dst) pair and
+``cap_slot`` bounds tokens per physical expert slot.  Overflow is dropped
+and *counted* (exposed in stats); equivalence tests run with capacities
+sized for zero drops.  Balancing is precisely what makes small capacities
+safe -- the measured max slot occupancy under each balancer mode is the
+paper's Fig. 14 activation-memory story.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.planner import occurrence_index, token_targets
+
+__all__ = ["DispatchOut", "dispatch_tokens", "combine_tokens", "bucket_by_slot",
+           "unbucket"]
+
+_I32 = jnp.int32
+
+
+class DispatchOut(NamedTuple):
+    send_x: jax.Array        # (R, cap_pair, D) padded send buffers
+    send_e: jax.Array        # (R, cap_pair) logical expert ids, -1 pad
+    item_dst: jax.Array      # (T*k,) destination rank per item (-1 dropped)
+    item_pos: jax.Array      # (T*k,) position within (dst) buffer
+    item_kept: jax.Array     # (T*k,) bool
+    drops: jax.Array         # () int32 dropped items on this rank
+
+
+def dispatch_tokens(
+    x_local: jax.Array,
+    expert_ids: jax.Array,
+    q_row: jax.Array,
+    *,
+    cap_pair: int,
+) -> DispatchOut:
+    """Build per-destination send buffers from the plan's reroute split.
+
+    Args:
+      x_local: (T, D) local tokens.
+      expert_ids: (T, k) selected logical experts.
+      q_row: (E, R) this source rank's reroute split (plan.q[my_rank]).
+      cap_pair: static capacity per (src, dst) pair.
+    """
+    T, k = expert_ids.shape
+    D = x_local.shape[-1]
+    R = q_row.shape[-1]
+    items_e = expert_ids.reshape(-1)                     # (T*k,)
+    items_t = jnp.repeat(jnp.arange(T, dtype=_I32), k)   # token of each item
+
+    dst = token_targets(items_e, q_row)                  # (T*k,)
+    pos = occurrence_index(dst)                          # j-th item to dst
+    kept = pos < cap_pair
+    drops = jnp.sum(~kept).astype(_I32)
+
+    safe_dst = jnp.where(kept, dst, 0)
+    safe_pos = jnp.where(kept, pos, 0)
+    send_x = jnp.zeros((R, cap_pair, D), x_local.dtype)
+    send_e = jnp.full((R, cap_pair), -1, _I32)
+    # Scatter items; dropped items overwrite slot (0,0) harmlessly below via
+    # masking: scatter only kept items by routing drops to a scratch row.
+    scratch_dst = jnp.where(kept, safe_dst, R - 1)
+    scratch_pos = jnp.where(kept, safe_pos, cap_pair - 1)
+    # To avoid clobbering real data with dropped items, apply kept as weight.
+    send_x = send_x.at[scratch_dst, scratch_pos].add(
+        x_local[items_t] * kept[:, None].astype(x_local.dtype)
+    )
+    send_e = send_e.at[scratch_dst, scratch_pos].max(
+        jnp.where(kept, items_e, -1)
+    )
+    return DispatchOut(send_x, send_e, jnp.where(kept, dst, -1), pos, kept, drops)
+
+
+def bucket_by_slot(
+    recv_x: jax.Array,
+    recv_e: jax.Array,
+    slot_of: jax.Array,
+    *,
+    num_slots: int,
+    cap_slot: int,
+):
+    """Group received items into per-physical-slot capacity buffers.
+
+    Args:
+      recv_x: (R, cap_pair, D) received tokens.
+      recv_e: (R, cap_pair) logical expert per token (-1 pad).
+      slot_of: (E,) local physical slot of each logical expert (-1 if not
+        hosted here; such items are dropped -- they indicate a plan bug and
+        are counted).
+
+    Returns:
+      (xs, valid, back_idx, drops): slot buffers (num_slots, cap_slot, D),
+      their validity mask, and for each buffer entry the flat index into the
+      (R*cap_pair) receive stream it came from (for the inverse scatter).
+    """
+    R, cap_pair, D = recv_x.shape
+    flat_x = recv_x.reshape(-1, D)
+    flat_e = recv_e.reshape(-1)
+    is_real = flat_e >= 0
+    slot = jnp.where(is_real, slot_of[jnp.where(is_real, flat_e, 0)], num_slots)
+    hosted_ok = slot >= 0
+    slot = jnp.where(hosted_ok, slot, num_slots)  # park bad items past the end
+
+    pos = occurrence_index(slot.astype(_I32))
+    kept = (slot < num_slots) & (pos < cap_slot)
+    drops = jnp.sum(is_real & ~kept).astype(_I32)
+
+    safe_slot = jnp.where(kept, slot, num_slots - 1).astype(_I32)
+    safe_pos = jnp.where(kept, pos, cap_slot - 1)
+    xs = jnp.zeros((num_slots, cap_slot, D), recv_x.dtype)
+    xs = xs.at[safe_slot, safe_pos].add(
+        flat_x * kept[:, None].astype(flat_x.dtype)
+    )
+    valid = jnp.zeros((num_slots, cap_slot), jnp.bool_)
+    valid = valid.at[safe_slot, safe_pos].max(kept)
+    back_idx = jnp.full((num_slots, cap_slot), -1, _I32)
+    back_idx = back_idx.at[safe_slot, safe_pos].max(
+        jnp.where(kept, jnp.arange(flat_e.shape[0], dtype=_I32), -1)
+    )
+    return xs, valid, back_idx, drops
+
+
+def unbucket(
+    out: jax.Array,
+    valid: jax.Array,
+    back_idx: jax.Array,
+    recv_shape: tuple[int, int, int],
+) -> jax.Array:
+    """Scatter slot-buffer outputs back into the (R, cap_pair, D) layout."""
+    R, cap_pair, D = recv_shape
+    flat = jnp.zeros((R * cap_pair, D), out.dtype)
+    idx = jnp.where(valid, back_idx, 0).reshape(-1)
+    vals = (out * valid[:, :, None].astype(out.dtype)).reshape(-1, D)
+    flat = flat.at[idx].add(vals)
+    return flat.reshape(R, cap_pair, D)
+
+
+def combine_tokens(
+    ret_x: jax.Array,
+    disp: DispatchOut,
+    weights: jax.Array,
+    num_tokens: int,
+) -> jax.Array:
+    """Weighted combine of returned expert outputs back onto source tokens.
+
+    Args:
+      ret_x: (R, cap_pair, D) expert outputs returned via the inverse
+        all_to_all, in the same positions the items were sent from.
+      disp: the DispatchOut of the forward dispatch.
+      weights: (T, k) combine weights.
+      num_tokens: T.
+    """
+    T, k = weights.shape
+    D = ret_x.shape[-1]
+    items_t = jnp.repeat(jnp.arange(T, dtype=_I32), k)
+    flat_w = weights.reshape(-1)
+    safe_dst = jnp.where(disp.item_kept, disp.item_dst, 0)
+    safe_pos = jnp.where(disp.item_kept, disp.item_pos, 0)
+    vals = ret_x[safe_dst, safe_pos] * (
+        flat_w * disp.item_kept.astype(flat_w.dtype)
+    )[:, None].astype(ret_x.dtype)
+    y = jnp.zeros((num_tokens, D), ret_x.dtype)
+    return y.at[items_t].add(vals)

@@ -1,0 +1,103 @@
+"""Replica weight distribution and gradient reduction (paper S6.1 on TPU).
+
+The paper streams expert weights from each main's home rank to its replicas
+with persistent tile kernels over one-sided RSN stores; gradients flow back
+with the mirrored reduction.  On TPU the wire belongs to XLA, so we express
+the same traffic as a collective whose *transpose is exactly the paper's
+backward* (DESIGN.md S2):
+
+  forward : replica_w = psum_scatter_{EP}( onehot(slot_wants_my_expert) @ w_local )
+  backward: dL/dw_local = onehot^T @ all_gather_{EP}( dL/dreplica_w )
+
+i.e. ``jax.grad`` mechanically derives the replica-gradient reduction onto
+main experts -- the training-equivalence property of S4.2 holds by
+construction rather than by a hand-written mirror kernel.
+
+Chunking over the FFN dimension plays the role of the paper's tile streaming:
+``n_chunks`` bounds the transient buffer (R*N_slot*D*F/n_chunks) and gives
+the XLA latency-hiding scheduler independent transfers to overlap with
+gating/reroute compute.  The per-transfer byte volume equals the paper's:
+each rank *receives* exactly its N_slot inbound replicas.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["replica_selector", "materialize_replicas"]
+
+
+def replica_selector(x_slots_flat: jax.Array, local_expert_base: jax.Array,
+                     experts_per_rank: int) -> jax.Array:
+    """One-hot (R*N_slot, E_local) map: global slot j <- my local expert i.
+
+    ``x_slots_flat`` is the flattened plan slot table (R*N_slot,) of logical
+    expert ids (-1 = empty); ``local_expert_base`` is this rank's first main
+    expert id.  Empty slots select nothing.
+    """
+    local_idx = x_slots_flat - local_expert_base  # (R*N_slot,)
+    in_range = (local_idx >= 0) & (local_idx < experts_per_rank)
+    onehot = jax.nn.one_hot(
+        jnp.where(in_range, local_idx, 0), experts_per_rank, dtype=jnp.float32
+    )
+    return onehot * in_range[:, None].astype(jnp.float32)
+
+
+def materialize_replicas(
+    w_local: jax.Array,
+    x_slots: jax.Array,
+    my_rank: jax.Array,
+    axis_name: str | None,
+    *,
+    n_chunks: int = 1,
+) -> jax.Array:
+    """Gather this rank's replica weights from their home ranks.
+
+    Args:
+      w_local: (E_local, D, F) this rank's main expert weights.
+      x_slots: (R, N_slot) the plan's slot table (identical on all ranks).
+      my_rank: scalar EP rank index of the caller.
+      axis_name: shard_map axis of the EP group; None = single-rank mode
+        (R == 1), where replicas are just local gathers.
+      n_chunks: tile-streaming knob -- chunks of the last (F) dimension.
+
+    Returns:
+      (N_slot, D, F) replica weights for this rank's redundant slots; zero
+      for empty slots.
+    """
+    epr, D, F = w_local.shape
+    R, n_slot = x_slots.shape
+    flat = x_slots.reshape(-1)  # (R*n_slot,)
+
+    if axis_name is None:
+        # Single-rank EP group: replicas are local (or empty).
+        sel = replica_selector(flat, jnp.asarray(0), epr)  # base 0
+        rep = jnp.einsum("je,edf->jdf", sel.astype(w_local.dtype), w_local)
+        return rep.reshape(R, n_slot, D, F)[0]
+
+    base = (my_rank * epr).astype(flat.dtype)
+    sel = replica_selector(flat, base, epr).astype(w_local.dtype)
+
+    if n_chunks <= 1:
+        partial = jnp.einsum("je,edf->jdf", sel, w_local)  # (R*n_slot, D, F)
+        rep = jax.lax.psum_scatter(
+            partial.reshape(R, n_slot, D, F), axis_name, scatter_dimension=0,
+            tiled=False,
+        )
+        return rep
+    # Tile streaming: chunk the F dimension so the transient send buffer is
+    # (R*n_slot, D, F/n_chunks) and chunks pipeline under the XLA scheduler.
+    chunk = -(-F // n_chunks)
+    outs = []
+    for c in range(n_chunks):
+        lo = c * chunk
+        w_c = jax.lax.dynamic_slice_in_dim(w_local, lo, min(chunk, F - lo), 2)
+        partial = jnp.einsum("je,edf->jdf", sel, w_c)
+        outs.append(
+            jax.lax.psum_scatter(
+                partial.reshape(R, n_slot, D, w_c.shape[-1]), axis_name,
+                scatter_dimension=0, tiled=False,
+            )
+        )
+    return jnp.concatenate(outs, axis=-1)

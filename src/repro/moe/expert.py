@@ -1,0 +1,50 @@
+"""Grouped expert FFN over physical slot buffers.
+
+Computes SwiGLU independently per physical expert slot on capacity-padded
+token buffers.  The einsum formulation is the XLA path (used by dry-runs and
+CPU tests); ``use_kernel=True`` routes the two grouped GEMMs through the
+Pallas grouped-GEMM kernel (TPU hot path, validated in interpret mode).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["grouped_ffn"]
+
+
+def grouped_ffn(
+    xs: jax.Array,
+    valid: jax.Array,
+    w1: jax.Array,
+    w3: jax.Array,
+    w2: jax.Array,
+    *,
+    use_kernel: bool = False,
+) -> jax.Array:
+    """Per-slot SwiGLU.
+
+    Args:
+      xs: (G, C, D) capacity-padded token buffers, one per physical slot.
+      valid: (G, C) bool mask of real tokens.
+      w1, w3: (G, D, F); w2: (G, F, D) per-slot weights.
+      use_kernel: dispatch the GEMMs to the Pallas grouped-GEMM kernel.
+
+    Returns:
+      (G, C, D) outputs, zero on padded rows.
+    """
+    xs = jnp.where(valid[:, :, None], xs, 0)
+    if use_kernel:
+        from repro.kernels.grouped_gemm import ops as gg
+
+        h = gg.grouped_matmul(xs, w1)
+        g = gg.grouped_matmul(xs, w3)
+        act = jax.nn.silu(h) * g
+        out = gg.grouped_matmul(act, w2)
+    else:
+        h = jnp.einsum("gcd,gdf->gcf", xs, w1)
+        g = jnp.einsum("gcd,gdf->gcf", xs, w3)
+        act = jax.nn.silu(h) * g
+        out = jnp.einsum("gcf,gfd->gcd", act, w2)
+    return jnp.where(valid[:, :, None], out, 0).astype(xs.dtype)

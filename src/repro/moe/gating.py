@@ -1,0 +1,126 @@
+"""MoE routers: top-k gating, auxiliary losses, aux-free bias routing.
+
+Covers the router families of the assigned architectures:
+
+  * softmax top-k (jamba top-2/16, dbrx top-4/16, qwen/glm 8/128-160) with
+    optional renormalisation of the selected weights;
+  * DeepSeek-V3 sigmoid scoring with an *aux-loss-free* routing bias: the
+    bias steers selection only (never the combine weights) and is updated
+    outside the gradient from realized load (Wang et al., 2024);
+  * GShard auxiliary load-balancing loss (Lepikhin et al., 2021);
+  * a force-balanced ``ideal`` mode (the paper's upper-bound baseline) that
+    assigns tokens round-robin, bypassing the learned router.
+
+The router runs in fp32 regardless of activation dtype (routing decisions
+are precision-sensitive).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["GatingConfig", "GateOut", "gate", "update_router_bias",
+           "gshard_aux_loss"]
+
+_I32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class GatingConfig:
+    num_experts: int
+    top_k: int
+    score_fn: str = "softmax"          # "softmax" | "sigmoid"
+    norm_topk_prob: bool = True        # renormalise selected weights to sum 1
+    aux_loss_weight: float = 0.0       # GShard loss coefficient
+    routed_scaling: float = 1.0        # DeepSeek-V3 scales routed output
+    use_bias: bool = False             # aux-free routing bias (DeepSeek)
+    bias_update_speed: float = 1e-3
+    ideal: bool = False                # force-balanced round-robin router
+
+
+class GateOut(NamedTuple):
+    expert_ids: jax.Array     # (T, k) int32 selected logical experts
+    weights: jax.Array        # (T, k) combine weights (activation dtype)
+    counts: jax.Array         # (E,) int32 realized per-expert token load
+    aux_loss: jax.Array       # () scalar (0 when disabled)
+    scores: jax.Array         # (T, E) router probabilities (fp32)
+
+
+def gshard_aux_loss(scores: jax.Array, expert_ids: jax.Array,
+                    num_experts: int) -> jax.Array:
+    """GShard load-balancing loss: E * sum_e f_e * P_e."""
+    T = scores.shape[0]
+    k = expert_ids.shape[1]
+    f = jnp.zeros((num_experts,), jnp.float32).at[expert_ids.reshape(-1)].add(
+        1.0 / (T * k)
+    )
+    p = scores.mean(axis=0)
+    return num_experts * jnp.sum(f * p)
+
+
+def gate(
+    x: jax.Array,
+    w_router: jax.Array,
+    cfg: GatingConfig,
+    *,
+    bias: jax.Array | None = None,
+) -> GateOut:
+    """Route tokens.
+
+    Args:
+      x: (T, D) token activations.
+      w_router: (D, E) router projection.
+      cfg: gating configuration.
+      bias: (E,) aux-free selection bias (DeepSeek), ignored unless
+        ``cfg.use_bias``.
+    """
+    T = x.shape[0]
+    E, k = cfg.num_experts, cfg.top_k
+    logits = jnp.asarray(x, jnp.float32) @ jnp.asarray(w_router, jnp.float32)
+
+    if cfg.score_fn == "softmax":
+        scores = jax.nn.softmax(logits, axis=-1)
+    elif cfg.score_fn == "sigmoid":
+        scores = jax.nn.sigmoid(logits)
+    else:
+        raise ValueError(f"unknown score_fn {cfg.score_fn}")
+
+    if cfg.ideal:
+        # Force-balanced upper bound: round-robin over experts; weights from
+        # the learned scores so magnitudes remain realistic.
+        base = (jnp.arange(T, dtype=_I32) * k) % E
+        expert_ids = (base[:, None] + jnp.arange(k, dtype=_I32)[None, :]) % E
+        sel = jnp.take_along_axis(scores, expert_ids, axis=1)
+    else:
+        sel_scores = scores
+        if cfg.use_bias and bias is not None:
+            sel_scores = scores + bias[None, :].astype(jnp.float32)
+        _, expert_ids = jax.lax.top_k(sel_scores, k)
+        expert_ids = expert_ids.astype(_I32)
+        # Combine weights always come from the *unbiased* scores.
+        sel = jnp.take_along_axis(scores, expert_ids, axis=1)
+
+    if cfg.norm_topk_prob:
+        sel = sel / jnp.maximum(sel.sum(axis=-1, keepdims=True), 1e-20)
+    sel = sel * cfg.routed_scaling
+
+    counts = jnp.zeros((E,), _I32).at[expert_ids.reshape(-1)].add(1)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.aux_loss_weight > 0.0:
+        aux = cfg.aux_loss_weight * gshard_aux_loss(scores, expert_ids, E)
+    return GateOut(expert_ids, sel.astype(x.dtype), counts, aux, scores)
+
+
+def update_router_bias(bias: jax.Array, counts: jax.Array,
+                       speed: float) -> jax.Array:
+    """Aux-free bias update: nudge under-loaded experts up, overloaded down.
+
+    Applied outside the gradient once per (global) batch, DeepSeek-V3 style.
+    """
+    load = counts.astype(jnp.float32)
+    err = load.mean() - load            # >0 for under-loaded experts
+    return bias + speed * jnp.sign(err)

@@ -1,0 +1,266 @@
+"""Balanced MoE layer: the paper's Fig. 8 forward pipeline on TPU.
+
+Per EP rank (inside ``shard_map`` over the EP axis), one MoE layer executes:
+
+  gate -> all_gather(counts) = exact load  ->  solve plan (device-resident)
+       -> [ materialize replica weights  ||  reroute items ]
+       -> token all_to_all -> grouped FFN over physical slots
+       -> inverse all_to_all -> weighted combine (+ shared experts)
+
+Backward is derived by ``jax.grad``: the replica-weight collective transposes
+into the replica-gradient reduction onto mains (S4.2), and a
+``jax.checkpoint`` policy re-materialises replica weights instead of saving
+them (the paper's cross-layer redundant-buffer reuse).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import balancer as balancer_mod
+from repro.core.balancer import BalancerConfig
+from repro.core.layout import ExpertLayout, physical_slot_of
+from repro.moe.dispatch import (
+    bucket_by_slot,
+    combine_tokens,
+    dispatch_tokens,
+    unbucket,
+)
+from repro.moe.distribute import materialize_replicas
+from repro.moe.expert import grouped_ffn
+from repro.moe.gating import GateOut, GatingConfig, gate
+from repro.moe.reference import swiglu
+
+__all__ = ["MoEConfig", "MoEParams", "MoEStats", "moe_layer_local",
+           "init_moe_params", "default_capacities"]
+
+_I32 = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    gating: GatingConfig
+    balancer: BalancerConfig
+    d_model: int
+    d_ff: int                      # per-expert hidden size
+    ep_size: int                   # R (EP group = model-axis size)
+    cap_pair: int                  # tokens per (src,dst) pair buffer
+    cap_slot: int                  # tokens per physical expert slot
+    n_shared_experts: int = 0      # DeepSeek shared (always-on) experts
+    shared_d_ff: int = 0
+    distribute_chunks: int = 1     # tile-streaming chunk knob
+    use_kernel: bool = False       # Pallas grouped-GEMM for expert FFN
+    dispatch_mode: str = "a2a"     # "a2a" (EP all-to-all) | "replicated"
+    # "replicated": tokens are replicated across the EP axis (decode path /
+    # exact reference); each rank computes the quota-assigned share of items
+    # for its hosted slots and the outputs are psum-combined.  No token
+    # all_to_all, no pair capacities, no drops at pair granularity.
+
+    @property
+    def layout(self) -> ExpertLayout:
+        return ExpertLayout(self.gating.num_experts, self.ep_size,
+                            self.balancer.n_slot)
+
+
+class MoEParams(NamedTuple):
+    router: jax.Array        # (D, E) fp32 router projection
+    w1: jax.Array            # (E_local, D, F) gate proj (per-rank shard)
+    w3: jax.Array            # (E_local, D, F) up proj
+    w2: jax.Array            # (E_local, F, D) down proj
+    shared_w1: jax.Array | None = None   # (D, F_sh)
+    shared_w3: jax.Array | None = None
+    shared_w2: jax.Array | None = None   # (F_sh, D)
+
+
+class MoEStats(NamedTuple):
+    drops_dispatch: jax.Array   # () items dropped at pair-capacity
+    drops_slot: jax.Array       # () items dropped at slot-capacity
+    pre_max: jax.Array          # () pre-balance max rank load
+    post_max: jax.Array         # () post-balance max rank load
+    max_slot_load: jax.Array    # () busiest physical slot occupancy
+    counts: jax.Array           # (E,) local per-expert load
+
+
+def default_capacities(tokens_per_rank: int, top_k: int, ep_size: int,
+                       slots_per_rank: int, *, cf_pair: float = 2.0,
+                       cf_slot: float = 2.0) -> tuple[int, int]:
+    """Static capacity bounds sized off the balanced expectation.
+
+    Balanced dispatch sends ~T*k/R items per (src,dst) pair and lands ~T*k
+    items per rank spread over its physical slots; the capacity factor is the
+    safety margin for residual imbalance.  Unbalanced runs need cf ~= the
+    pre-balance imbalance ratio (1.3-4x per the paper) -- this is exactly how
+    balancing shows up as memory savings (Fig. 14).
+    """
+    items = tokens_per_rank * top_k
+    cap_pair = max(8, int(-(-items * cf_pair // ep_size)))
+    cap_slot = max(8, int(-(-items * cf_slot // slots_per_rank)))
+    return cap_pair, cap_slot
+
+
+def init_moe_params(key: jax.Array, cfg: MoEConfig,
+                    dtype=jnp.float32) -> MoEParams:
+    """Per-rank parameter shard (E_local experts)."""
+    E = cfg.gating.num_experts
+    epr = E // cfg.ep_size
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 7)
+    scale_in = D ** -0.5
+    scale_out = F ** -0.5
+    shared = [None, None, None]
+    if cfg.n_shared_experts > 0:
+        Fs = cfg.shared_d_ff * cfg.n_shared_experts
+        shared = [
+            (jax.random.normal(ks[4], (D, Fs), dtype) * scale_in),
+            (jax.random.normal(ks[5], (D, Fs), dtype) * scale_in),
+            (jax.random.normal(ks[6], (Fs, D), dtype) * scale_out),
+        ]
+    return MoEParams(
+        router=jax.random.normal(ks[0], (D, E), jnp.float32) * scale_in,
+        w1=jax.random.normal(ks[1], (epr, D, F), dtype) * scale_in,
+        w3=jax.random.normal(ks[2], (epr, D, F), dtype) * scale_in,
+        w2=jax.random.normal(ks[3], (epr, F, D), dtype) * scale_out,
+        shared_w1=shared[0], shared_w3=shared[1], shared_w2=shared[2],
+    )
+
+
+def moe_layer_local(
+    x: jax.Array,
+    params: MoEParams,
+    cfg: MoEConfig,
+    *,
+    axis_name: str | None,
+    router_bias: jax.Array | None = None,
+    lam_e_est: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, MoEStats]:
+    """One balanced MoE layer, per-rank view (call under shard_map).
+
+    Args:
+      x: (T_local, D) this rank's tokens.
+      params: per-rank parameter shard.
+      axis_name: EP mesh axis; None = single-rank (R must be 1).
+      router_bias: optional (E,) aux-free routing bias.
+      lam_e_est: optional stale per-expert load estimate (EPLB mode).
+
+    Returns:
+      (y, aux_loss, stats) with y: (T_local, D).
+    """
+    T, D = x.shape
+    layout = cfg.layout
+    R = cfg.ep_size
+    epr = layout.experts_per_rank
+    n_slot = layout.n_slot
+    num_slots = epr + n_slot
+
+    gate_out: GateOut = gate(x, params.router, cfg.gating, bias=router_bias)
+
+    # --- exact load matrix (reuses the dispatch notify metadata) -----------
+    home = layout.home()
+    if cfg.dispatch_mode == "replicated":
+        # Tokens are identical on every EP rank, so counts are already the
+        # EP-group totals -- no collective needed.  Attribute the load to the
+        # experts' home ranks (source locality is vacuous here).
+        lam = (jax.nn.one_hot(home, R, dtype=_I32)
+               * gate_out.counts[:, None]).T                        # (R, E)
+        my = (jax.lax.axis_index(axis_name).astype(_I32)
+              if axis_name is not None else jnp.asarray(0, _I32))
+    elif axis_name is not None:
+        lam = jax.lax.all_gather(gate_out.counts, axis_name)       # (R, E)
+        my = jax.lax.axis_index(axis_name).astype(_I32)
+    else:
+        if R != 1:
+            raise ValueError("axis_name=None requires ep_size == 1")
+        lam = gate_out.counts[None]
+        my = jnp.asarray(0, _I32)
+    plan = balancer_mod.solve(lam, home, cfg.balancer, lam_e_est=lam_e_est)
+
+    # --- replica weight distribution (overlappable with reroute) ----------
+    w1r = materialize_replicas(params.w1, plan.x, my, axis_name,
+                               n_chunks=cfg.distribute_chunks)
+    w3r = materialize_replicas(params.w3, plan.x, my, axis_name,
+                               n_chunks=cfg.distribute_chunks)
+    w2r = materialize_replicas(params.w2, plan.x, my, axis_name,
+                               n_chunks=cfg.distribute_chunks)
+    w1_all = jnp.concatenate([params.w1, w1r], axis=0)   # (num_slots, D, F)
+    w3_all = jnp.concatenate([params.w3, w3r], axis=0)
+    w2_all = jnp.concatenate([params.w2, w2r], axis=0)
+
+    slot_of_all = physical_slot_of(layout, plan.x)
+
+    if cfg.dispatch_mode == "replicated":
+        # Tokens identical on every EP rank (decode / exact-reference path):
+        # item j of expert e is owned by the instance whose cumulative quota
+        # covers j; this rank computes its share and results are psum-merged.
+        from repro.core.planner import token_targets as _tt
+
+        items_e = gate_out.expert_ids.reshape(-1)
+        owner = _tt(items_e, plan.u)  # (T*k,): u is the single-source split
+        mine = owner == my
+        recv_e = jnp.where(mine, items_e, -1)[None, :]      # (1, T*k)
+        recv_x = jnp.repeat(x, cfg.gating.top_k, axis=0)[None, :, :]
+        slot_of = slot_of_all[my]
+        xs, valid, back_idx, slot_drops = bucket_by_slot(
+            recv_x, recv_e, slot_of, num_slots=num_slots, cap_slot=cfg.cap_slot
+        )
+        out = grouped_ffn(xs, valid, w1_all, w3_all, w2_all,
+                          use_kernel=cfg.use_kernel)
+        ret = unbucket(out, valid, back_idx, (1, T * cfg.gating.top_k, D))
+        flat_w = gate_out.weights.reshape(-1)
+        items_t = jnp.repeat(jnp.arange(T, dtype=_I32), cfg.gating.top_k)
+        vals = ret[0] * flat_w[:, None].astype(ret.dtype)
+        y = jnp.zeros((T, D), ret.dtype).at[items_t].add(vals)
+        if axis_name is not None:
+            y = jax.lax.psum(y, axis_name)
+        if cfg.n_shared_experts > 0:
+            y = y + swiglu(x, params.shared_w1, params.shared_w3,
+                           params.shared_w2)
+        stats = MoEStats(
+            drops_dispatch=jnp.zeros((), _I32),
+            drops_slot=slot_drops,
+            pre_max=plan.pre_max,
+            post_max=plan.post_max,
+            max_slot_load=valid.sum(axis=1).max().astype(_I32),
+            counts=gate_out.counts,
+        )
+        return y.astype(x.dtype), gate_out.aux_loss, stats
+
+    # --- reroute + dispatch ------------------------------------------------
+    q_row = plan.q[my]                                     # (E, R)
+    disp = dispatch_tokens(x, gate_out.expert_ids, q_row, cap_pair=cfg.cap_pair)
+    if axis_name is not None:
+        recv_x = jax.lax.all_to_all(disp.send_x, axis_name, 0, 0, tiled=False)
+        recv_e = jax.lax.all_to_all(disp.send_e, axis_name, 0, 0, tiled=False)
+    else:
+        recv_x, recv_e = disp.send_x, disp.send_e
+
+    slot_of = slot_of_all[my]                              # (E,)
+    xs, valid, back_idx, slot_drops = bucket_by_slot(
+        recv_x, recv_e, slot_of, num_slots=num_slots, cap_slot=cfg.cap_slot
+    )
+
+    # --- grouped expert FFN -------------------------------------------------
+    out = grouped_ffn(xs, valid, w1_all, w3_all, w2_all,
+                      use_kernel=cfg.use_kernel)
+
+    # --- inverse path + combine ---------------------------------------------
+    ret = unbucket(out, valid, back_idx, (R, cfg.cap_pair, D))
+    if axis_name is not None:
+        ret = jax.lax.all_to_all(ret, axis_name, 0, 0, tiled=False)
+    y = combine_tokens(ret, disp, gate_out.weights, T)
+
+    if cfg.n_shared_experts > 0:
+        y = y + swiglu(x, params.shared_w1, params.shared_w3, params.shared_w2)
+
+    stats = MoEStats(
+        drops_dispatch=disp.drops,
+        drops_slot=slot_drops,
+        pre_max=plan.pre_max,
+        post_max=plan.post_max,
+        max_slot_load=valid.sum(axis=1).max().astype(_I32),
+        counts=gate_out.counts,
+    )
+    return y.astype(x.dtype), gate_out.aux_loss, stats

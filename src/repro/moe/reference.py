@@ -1,0 +1,52 @@
+"""Semantic MoE oracle: per-token dense expert compute, no parallelism.
+
+``moe_ref`` computes exactly what a balanced EP execution must reproduce:
+``y_t = sum_k w_{t,k} * FFN_{e_{t,k}}(x_t) (+ shared expert)``.  Used by
+equivalence tests (EP output == oracle when nothing is dropped) and as the
+correctness anchor for the paper's "preserves training equivalence" claim
+(S4.2): gradients of the EP path must match gradients of this oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["swiglu", "moe_ref"]
+
+
+def swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array) -> jax.Array:
+    """SwiGLU FFN: (silu(x @ w1) * (x @ w3)) @ w2."""
+    return (jax.nn.silu(x @ w1) * (x @ w3)) @ w2
+
+
+def moe_ref(
+    x: jax.Array,
+    expert_ids: jax.Array,
+    weights: jax.Array,
+    w1: jax.Array,
+    w3: jax.Array,
+    w2: jax.Array,
+    *,
+    shared: tuple[jax.Array, jax.Array, jax.Array] | None = None,
+) -> jax.Array:
+    """Dense per-token MoE (test-scale only: computes every expert on every
+    token).
+
+    Args:
+      x: (T, D) tokens.
+      expert_ids: (T, k) selected experts.
+      weights: (T, k) combine weights.
+      w1, w3: (E, D, F) gate/up projections; w2: (E, F, D) down projection.
+      shared: optional always-on shared-expert weights (D,F),(D,F),(F,D).
+    """
+    h = jnp.einsum("td,edf->etf", x, w1)
+    g = jnp.einsum("td,edf->etf", x, w3)
+    out_all = jnp.einsum("etf,efd->etd", jax.nn.silu(h) * g, w2)  # (E, T, D)
+    sel = jnp.take_along_axis(
+        jnp.moveaxis(out_all, 0, 1), expert_ids[:, :, None], axis=1
+    )  # (T, k, D)
+    y = (sel * weights[:, :, None].astype(sel.dtype)).sum(axis=1)
+    if shared is not None:
+        y = y + swiglu(x, *shared)
+    return y.astype(x.dtype)

@@ -1,0 +1,13 @@
+"""Optimizers (pure JAX, self-contained): AdamW, Adafactor, schedules."""
+
+from repro.optim.optimizer import (
+    Optimizer,
+    adafactor,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    cosine_schedule,
+)
+
+__all__ = ["Optimizer", "adafactor", "adamw", "apply_updates",
+           "clip_by_global_norm", "cosine_schedule"]

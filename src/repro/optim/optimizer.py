@@ -1,0 +1,150 @@
+"""Self-contained optimizers.
+
+``adamw`` is the default; ``adafactor`` (factored second moment, no first
+moment by default) is used for the >100B dry-run configs where AdamW's fp32
+m/v would not fit HBM (DESIGN.md S7 memory budget notes).  Both are pure
+functions over pytrees so optimizer state inherits parameter shardings
+(FSDP/ZeRO falls out of the param PartitionSpecs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "adamw", "adafactor", "clip_by_global_norm",
+           "apply_updates", "cosine_schedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    # update(grads, state, params, step) -> (updates, new_state)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+
+
+def adamw(lr: float | Callable, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(mu=jax.tree.map(zeros, params),
+                          nu=jax.tree.map(zeros, params))
+
+    def update(grads, state, params, step):
+        stepf = step.astype(jnp.float32) + 1.0
+        lr_t = lr_fn(step)
+
+        def upd(g, m, n, p):
+            gf = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * gf
+            n = b2 * n + (1 - b2) * gf * gf
+            mhat = m / (1 - b1 ** stepf)
+            nhat = n / (1 - b2 ** stepf)
+            u = -lr_t * (mhat / (jnp.sqrt(nhat) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            return u, m, n
+
+        gl, treedef = jax.tree.flatten(grads)
+        out = [upd(g, m, n, p) for g, m, n, p in
+               zip(gl, jax.tree.leaves(state.mu), jax.tree.leaves(state.nu),
+                   jax.tree.leaves(params))]
+        updates = treedef.unflatten([o[0] for o in out])
+        mu = treedef.unflatten([o[1] for o in out])
+        nu = treedef.unflatten([o[2] for o in out])
+        return updates, AdamWState(mu, nu)
+
+    return Optimizer(init=init, update=update)
+
+
+class AdafactorState(NamedTuple):
+    v_row: Any   # factored second moment (rows) or full v for <2D
+    v_col: Any
+
+
+def adafactor(lr: float | Callable, decay: float = 0.99,
+              eps: float = 1e-30, clip_threshold: float = 1.0) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern), no first moment."""
+    lr_fn = lr if callable(lr) else (lambda _: jnp.asarray(lr, jnp.float32))
+
+    def factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def vr(p):
+            if factored(p):
+                return jnp.zeros(p.shape[:-1], jnp.float32)
+            return jnp.zeros_like(p, dtype=jnp.float32)
+
+        def vc(p):
+            if factored(p):
+                return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+            return jnp.zeros((), jnp.float32)  # unused
+
+        return AdafactorState(v_row=jax.tree.map(vr, params),
+                              v_col=jax.tree.map(vc, params))
+
+    def update(grads, state, params, step):
+        lr_t = lr_fn(step)
+
+        def upd(g, vr, vc, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if factored(p):
+                vr = decay * vr + (1 - decay) * g2.mean(axis=-1)
+                vc = decay * vc + (1 - decay) * g2.mean(axis=-2)
+                denom = (
+                    vr[..., None]
+                    / jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)[..., None]
+                ) * vc[..., None, :]
+                u = gf * jax.lax.rsqrt(jnp.maximum(denom, eps))
+            else:
+                vr = decay * vr + (1 - decay) * g2
+                u = gf * jax.lax.rsqrt(jnp.maximum(vr, eps))
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return -lr_t * u, vr, vc
+
+        gl, treedef = jax.tree.flatten(grads)
+        out = [upd(g, vr, vc, p) for g, vr, vc, p in
+               zip(gl, jax.tree.leaves(state.v_row),
+                   jax.tree.leaves(state.v_col), jax.tree.leaves(params))]
+        updates = treedef.unflatten([o[0] for o in out])
+        v_row = treedef.unflatten([o[1] for o in out])
+        v_col = treedef.unflatten([o[2] for o in out])
+        return updates, AdafactorState(v_row, v_col)
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,1 @@
+"""Distribution: sharding rules, mesh helpers, pipeline stages."""

@@ -1,0 +1,12 @@
+"""Roofline analysis: hardware model + compiled-artifact term extraction."""
+
+from repro.roofline.hw import V5E, Hardware
+from repro.roofline.analysis import (
+    RooflineTerms,
+    collective_bytes,
+    roofline_from_compiled,
+    model_flops,
+)
+
+__all__ = ["V5E", "Hardware", "RooflineTerms", "collective_bytes",
+           "roofline_from_compiled", "model_flops"]

@@ -1,0 +1,247 @@
+"""Roofline terms from the compiled dry-run artifact.
+
+  compute    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory     = HLO_bytes_per_device / HBM_bw
+  collective = collective_bytes_per_device / ICI_link_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device numbers after
+SPMD partitioning).  Collective bytes are NOT in cost_analysis: we parse the
+optimized HLO text, resolve each collective's operand sizes through a symbol
+table, and -- crucially -- multiply instructions inside ``while`` bodies by
+the loop trip count (XLA's cost analysis counts loop bodies ONCE; verified
+empirically, see EXPERIMENTS.md SRoofline methodology).  Roofline runs
+therefore lower with ``analysis_unroll=True`` so the layer stack and inner
+flash/SSD scans are python-unrolled and every collective is visible at
+top level; residual whiles (the planner's binary search) are handled by the
+trip-count multiplier with a conservative warning when undeterminable.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = ["RooflineTerms", "collective_bytes", "roofline_from_compiled",
+           "model_flops", "parse_hlo_collectives"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{")
+_WHILE_RE = re.compile(
+    r"while\(.*?\).*?condition=%?([\w.\-]+).*?body=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Total bytes of all TYPE[shape] groups in a type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        m = _COMP_RE.match(line.strip())
+        if m and line.rstrip().endswith("{"):
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def parse_hlo_collectives(hlo: str) -> tuple[dict[str, int], dict[str, int],
+                                             list[str]]:
+    """Returns (bytes_by_kind, count_by_kind, warnings).
+
+    Bytes = operand sizes of each collective instruction, multiplied by the
+    trip count of every enclosing while loop.
+    """
+    comps = _split_computations(hlo)
+    warnings: list[str] = []
+
+    # Symbol table: instruction name -> operand-bytes of its own definition.
+    # For collectives we need the operand types; operands are %refs whose
+    # result types we look up.
+    def_types: dict[str, str] = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if m:
+                def_types[m.group(1)] = m.group(2)
+
+    def result_bytes(name: str) -> int:
+        t = def_types.get(name)
+        return _type_bytes(t.split(" ", 1)[0] if t else "")
+
+    # While multipliers: comp -> trip multiplier.
+    mult: dict[str, int] = defaultdict(lambda: 1)
+    # Find while instructions and their condition/body computations.
+    while_edges = []  # (parent_comp, cond, body)
+    for cname, lines in comps.items():
+        for line in lines:
+            if " while(" in line:
+                m = _WHILE_RE.search(line)
+                if m:
+                    while_edges.append((cname, m.group(1), m.group(2)))
+
+    def trip_count(cond_name: str) -> int:
+        lines = comps.get(cond_name, [])
+        consts = []
+        for line in lines:
+            consts += [int(c) for c in _CONST_RE.findall(line)]
+        if not consts:
+            warnings.append(
+                f"while condition {cond_name}: trip count unknown, using 1")
+            return 1
+        return max(consts)
+
+    # Propagate multipliers (one level of nesting resolved per pass).
+    for _ in range(4):
+        for parent, cond, body in while_edges:
+            mult[body] = mult[parent] * trip_count(cond)
+
+    bytes_by = defaultdict(int)
+    count_by = defaultdict(int)
+    for cname, lines in comps.items():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            rhs = m.group(2)
+            for kind in _COLLECTIVES:
+                # Match "= TYPE op(" incl. async "-start" (skip "-done").
+                if re.search(rf"\b{kind}(-start)?\(", rhs):
+                    args = re.search(rf"{kind}(?:-start)?\(([^)]*)\)", rhs)
+                    nbytes = 0
+                    if args:
+                        for ref in args.group(1).split(","):
+                            ref = ref.strip().lstrip("%")
+                            if ref in def_types:
+                                nbytes += result_bytes(ref)
+                    if nbytes == 0:  # fall back to result size
+                        nbytes = _type_bytes(rhs.split(" ", 1)[0])
+                    bytes_by[kind] += nbytes * mult[cname]
+                    count_by[kind] += mult[cname]
+                    break
+    return dict(bytes_by), dict(count_by), warnings
+
+
+def collective_bytes(hlo: str) -> int:
+    by, _, _ = parse_hlo_collectives(hlo)
+    return sum(by.values())
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    collectives_by_kind: dict
+    warnings: list
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_from_compiled(compiled, hw, *, hlo_text: str | None = None):
+    """Three-term roofline from a compiled executable (per-device program)."""
+    ca = compiled.cost_analysis()
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    txt = hlo_text if hlo_text is not None else compiled.as_text()
+    by_kind, counts, warn = parse_hlo_collectives(txt)
+    cbytes = float(sum(by_kind.values()))
+
+    compute_s = flops / hw.peak_flops
+    memory_s = byts / hw.hbm_bw
+    collective_s = cbytes / hw.ici_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    return RooflineTerms(
+        flops_per_device=flops,
+        bytes_per_device=byts,
+        collective_bytes_per_device=cbytes,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        collectives_by_kind={k: {"bytes": v, "count": counts.get(k, 0)}
+                             for k, v in by_kind.items()},
+        warnings=warn,
+    )
+
+
+def model_flops(cfg, shape, *, backward: bool) -> float:
+    """MODEL_FLOPS = 6 N_active D (train) or 2 N_active D (inference).
+
+    N_active counts embedding-free active parameters (MoE: top_k experts +
+    shared); D = processed tokens.  Used for the usefulness ratio
+    MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy waste).
+    """
+    from repro.configs.base import layer_kinds
+
+    D = cfg.d_model
+    n = 0
+    for kind in layer_kinds(cfg):
+        mixer, ffn = kind.split("+")
+        if mixer == "attn":
+            if cfg.is_mla:
+                qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+                n += D * cfg.q_lora_rank + cfg.q_lora_rank * cfg.num_heads * qk
+                n += D * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+                n += cfg.kv_lora_rank * cfg.num_heads * (
+                    cfg.qk_nope_dim + cfg.v_head_dim)
+                n += cfg.num_heads * cfg.v_head_dim * D
+            else:
+                n += D * (cfg.num_heads + 2 * cfg.num_kv_heads) * cfg.head_dim
+                n += cfg.num_heads * cfg.head_dim * D
+        else:
+            s = cfg.ssm
+            n += D * (2 * s.d_inner + 2 * s.n_groups * s.d_state
+                      + s.d_inner // s.headdim)
+            n += s.d_inner * D
+        if ffn == "dense":
+            n += 3 * D * cfg.d_ff
+        elif ffn == "moe":
+            m = cfg.moe
+            n += 3 * D * m.d_ff * m.top_k
+            n += 3 * D * m.shared_d_ff * m.n_shared_experts
+            n += D * m.num_experts  # router
+    # lm head (tied or not, the matmul runs)
+    n_head = cfg.d_model * cfg.vocab_size
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    mult = 6.0 if backward else 2.0
+    return mult * (n + n_head) * tokens

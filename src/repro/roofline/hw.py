@@ -1,0 +1,25 @@
+"""Target hardware constants (TPU v5e per the brief)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["Hardware", "V5E"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float       # bf16 FLOP/s per chip
+    hbm_bw: float           # bytes/s per chip
+    ici_bw: float           # bytes/s per ICI link
+    hbm_bytes: float        # capacity per chip
+
+
+V5E = Hardware(
+    name="tpu-v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    hbm_bytes=16 * 2**30,
+)

@@ -1,0 +1,5 @@
+"""Serving: chunked-prefill batcher + batched decode engine."""
+
+from repro.serving.engine import EngineConfig, Request, ServingEngine
+
+__all__ = ["EngineConfig", "Request", "ServingEngine"]

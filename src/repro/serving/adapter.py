@@ -1,0 +1,69 @@
+"""Glue: bind a model config to the ServingEngine callbacks."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import LMParams, decode_step, init_caches, prefill_step
+from repro.models.transformer import ParallelCtx, RuntimeConfig
+
+__all__ = ["make_engine_fns"]
+
+
+def make_engine_fns(params: LMParams, cfg: ModelConfig, rcfg: RuntimeConfig,
+                    pctx: ParallelCtx, *, max_seq: int):
+    """Returns (prefill_fn, decode_fn, new_cache_fn, stack_caches)."""
+
+    @jax.jit
+    def _prefill(tokens, caches, valid_len):
+        return prefill_step(params, caches, tokens, cfg, rcfg, pctx,
+                            valid_len=valid_len)
+
+    @jax.jit
+    def _decode(tokens, caches):
+        return decode_step(params, caches, tokens, cfg, rcfg, pctx)
+
+    def prefill_fn(tokens, caches, start, valid_len):
+        return _prefill(tokens, caches, jnp.asarray(valid_len, jnp.int32))
+
+    def decode_fn(tokens, caches):
+        return _decode(tokens, caches)
+
+    def new_cache_fn(batch):
+        return init_caches(cfg, batch, max_seq, rcfg)
+
+    # Structure-aware batch concat: stacked segments carry a leading layer
+    # axis, so their batch dim is axis 1; unstacked entries use axis 0.
+    from repro.models.transformer import segments_for
+
+    segs = segments_for(cfg, rcfg)
+    stacked_flags = [s.kind == "cycle"
+                     or (rcfg.scan_layers and s.length >= rcfg.min_scan_len)
+                     for s in segs]
+
+    def stack_caches(caches_list):
+        out = []
+        for i, stacked in enumerate(stacked_flags):
+            ax = 1 if stacked else 0
+            seg_caches = [c[i] for c in caches_list]
+            out.append(jax.tree.map(
+                lambda *xs: jnp.concatenate(xs, axis=ax), *seg_caches))
+        return tuple(out)
+
+    def unstack_caches(caches, n):
+        outs = []
+        for b in range(n):
+            per = []
+            for i, stacked in enumerate(stacked_flags):
+                ax = 1 if stacked else 0
+                per.append(jax.tree.map(
+                    lambda a, b=b, ax=ax: jax.lax.slice_in_dim(a, b, b + 1,
+                                                               axis=ax),
+                    caches[i]))
+            outs.append(tuple(per))
+        return outs
+
+    return (prefill_fn, decode_fn, new_cache_fn, stack_caches,
+            unstack_caches)

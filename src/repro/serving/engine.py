@@ -1,0 +1,152 @@
+"""Process-level serving engine: chunked prefill + batched decode.
+
+Implements the scheduling pattern the paper evaluates (S2.2/S8): requests
+arrive on a queue (Poisson traces in the benchmarks); prompts are split
+into fixed-size *chunks* (paper: 4K) and prefilled batch-by-batch -- the
+stage where expert imbalance hurts and where UltraEP balances every chunk
+-- then sequences decode in a fixed-slot batch.  The engine records
+per-request TTFT/TPOT for the RPS-TTFT curves of Fig. 12.
+
+This is the scheduling layer, not an RPC server (DESIGN.md S8); the model
+invocations are pure jitted functions so the same engine drives tiny test
+models on CPU and full configs in the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["EngineConfig", "Request", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray              # (len,) int32
+    max_new_tokens: int
+    arrival: float = 0.0
+    # filled by the engine:
+    first_token_at: float | None = None
+    done_at: float | None = None
+    output: list | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    chunk_size: int = 4096          # chunked-prefill size (paper: 4K)
+    decode_batch: int = 8           # decode slots
+    max_seq: int = 8192
+
+
+class ServingEngine:
+    """Drives (prefill_fn, decode_fn) over a request queue.
+
+    prefill_fn(tokens (1, chunk), cache, start) -> (logits, cache)
+    decode_fn(tokens (B, 1), caches)            -> (logits, caches)
+    new_cache_fn(batch) -> cache pytree
+
+    The engine keeps one cache per active request (prefill) and a batched
+    cache for decode slots; a virtual clock advances by the measured or
+    supplied per-call latency so TTFT/TPOT statistics work both for real
+    execution and for analytic replay.
+    """
+
+    def __init__(self, cfg: EngineConfig, *, prefill_fn: Callable,
+                 decode_fn: Callable, new_cache_fn: Callable,
+                 stack_caches: Callable,
+                 unstack_caches: Callable | None = None,
+                 clock_fn: Callable | None = None):
+        self.cfg = cfg
+        self.prefill_fn = prefill_fn
+        self.decode_fn = decode_fn
+        self.new_cache_fn = new_cache_fn
+        self.stack_caches = stack_caches
+        self.unstack_caches = unstack_caches or self.unstack
+        self.clock_fn = clock_fn
+        self.now = 0.0
+        self.waiting: deque[Request] = deque()
+        self.decoding: list[tuple[Request, object]] = []
+        self.finished: list[Request] = []
+
+    def submit(self, req: Request):
+        self.waiting.append(req)
+
+    def _advance(self, dt: float):
+        self.now += dt
+
+    def run(self, until_empty: bool = True):
+        """Alternate prefill and decode until queues drain."""
+        while self.waiting or self.decoding:
+            # 1. Prefill the oldest waiting request, chunk by chunk.
+            if self.waiting:
+                req = self.waiting.popleft()
+                if self.now < req.arrival:
+                    self.now = req.arrival
+                cache = self.new_cache_fn(1)
+                pos = 0
+                L = len(req.prompt)
+                last_logits = None
+                while pos < L:
+                    chunk = req.prompt[pos: pos + self.cfg.chunk_size]
+                    pad = self.cfg.chunk_size - len(chunk)
+                    toks = np.pad(chunk, (0, pad))[None, :]
+                    t0 = self.now
+                    last_logits, cache = self.prefill_fn(
+                        jnp.asarray(toks, jnp.int32), cache, pos, len(chunk))
+                    self._advance(self.clock_fn() if self.clock_fn else 0.0)
+                    pos += len(chunk)
+                req.first_token_at = self.now
+                first = int(np.argmax(np.asarray(last_logits)[0, -1]))
+                req.output = [first]
+                self.decoding.append((req, cache))
+
+            # 2. One decode step over all active slots (batched).
+            if self.decoding and (len(self.decoding) >= self.cfg.decode_batch
+                                  or not self.waiting):
+                group = self.decoding[: self.cfg.decode_batch]
+                toks = np.array([[r.output[-1]] for r, _ in group], np.int32)
+                caches = self.stack_caches([c for _, c in group])
+                logits, caches = self.decode_fn(jnp.asarray(toks), caches)
+                self._advance(self.clock_fn() if self.clock_fn else 0.0)
+                nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+                still = []
+                for i, (r, _) in enumerate(group):
+                    r.output.append(int(nxt[i]))
+                    if len(r.output) >= r.max_new_tokens:
+                        r.done_at = self.now
+                        self.finished.append(r)
+                    else:
+                        still.append(i)
+                new_caches = self.unstack_caches(caches, len(group))
+                self.decoding = (
+                    [(group[i][0], new_caches[i]) for i in still]
+                    + self.decoding[self.cfg.decode_batch:])
+            if not until_empty:
+                break
+        return self.finished
+
+    @staticmethod
+    def unstack(caches, n):
+        import jax
+
+        return [jax.tree.map(lambda a, i=i: a[i:i + 1]
+                             if hasattr(a, "ndim") and a.ndim > 0 else a,
+                             caches) for i in range(n)]
+
+    # ------------- metrics -------------
+
+    def ttft(self) -> np.ndarray:
+        return np.array([r.first_token_at - r.arrival
+                         for r in self.finished])
+
+    def tpot(self) -> np.ndarray:
+        out = []
+        for r in self.finished:
+            n = max(len(r.output) - 1, 1)
+            out.append((r.done_at - r.first_token_at) / n)
+        return np.array(out)

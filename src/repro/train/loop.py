@@ -1,0 +1,127 @@
+"""Train-step builder: loss, grads, microbatched accumulation, bias update.
+
+``make_train_step`` returns a pure ``(state, batch) -> (state, metrics)``
+suitable for ``jax.jit`` with donated state.  Gradient accumulation scans
+over microbatches (bounding activation memory); the aux-free router bias is
+updated outside the gradient from the realized per-layer loads (DeepSeek
+recipe), and gradient clipping is applied pre-optimizer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import (LMParams, blocked_lm_loss, forward,
+                                init_router_bias, lm_loss)
+from repro.models.transformer import ParallelCtx, RuntimeConfig
+from repro.moe.gating import update_router_bias
+from repro.optim.optimizer import Optimizer, apply_updates, clip_by_global_norm
+
+__all__ = ["TrainState", "TrainConfig", "make_train_step", "init_train_state"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1
+    clip_norm: float = 1.0
+    bias_update: bool = True        # aux-free router bias update
+
+
+class TrainState(NamedTuple):
+    params: LMParams
+    opt_state: Any
+    router_bias: jax.Array | None
+    step: jax.Array
+
+
+def init_train_state(params: LMParams, optimizer: Optimizer,
+                     cfg: ModelConfig) -> TrainState:
+    return TrainState(
+        params=params,
+        opt_state=optimizer.init(params),
+        router_bias=init_router_bias(cfg),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def make_train_step(cfg: ModelConfig, rcfg: RuntimeConfig, pctx: ParallelCtx,
+                    optimizer: Optimizer, tcfg: TrainConfig = TrainConfig()):
+    def loss_fn(params, batch, router_bias):
+        if rcfg.loss_chunks > 1:
+            x, aux, drops, counts = forward(params, batch, cfg, rcfg, pctx,
+                                            router_bias=router_bias,
+                                            return_hidden=True)
+            head = (params.embedding if params.lm_head is None
+                    else params.lm_head)
+            loss = blocked_lm_loss(x, head, batch["targets"],
+                                   chunks=rcfg.loss_chunks,
+                                   unroll=rcfg.analysis_unroll) + aux
+        else:
+            logits, aux, drops, counts = forward(
+                params, batch, cfg, rcfg, pctx, router_bias=router_bias)
+            loss = lm_loss(logits, batch["targets"]) + aux
+        return loss, (drops, counts)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def micro_grads(params, batch, router_bias):
+        if tcfg.microbatches <= 1:
+            (loss, (drops, counts)), grads = grad_fn(params, batch,
+                                                     router_bias)
+            return loss, drops, counts, grads
+
+        n = tcfg.microbatches
+        mb = jax.tree.map(lambda a: a.reshape(n, a.shape[0] // n, *a.shape[1:]),
+                          batch)
+
+        def body(carry, mbatch):
+            loss_a, drops_a, counts_a, grads_a = carry
+            (loss, (drops, counts)), grads = grad_fn(params, mbatch,
+                                                     router_bias)
+            grads_a = jax.tree.map(jnp.add, grads_a, grads)
+            return (loss_a + loss, drops_a + drops, counts_a + counts,
+                    grads_a), None
+
+        E = cfg.moe.num_experts if cfg.moe is not None else 1
+        zero_g = jax.tree.map(jnp.zeros_like, params)
+        zero_c = jnp.zeros((cfg.num_layers, E), jnp.int32)
+        (loss, drops, counts, grads), _ = jax.lax.scan(
+            body, (jnp.zeros(()), jnp.zeros((), jnp.int32), zero_c, zero_g),
+            mb)
+        inv = 1.0 / n
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        return loss * inv, drops, counts, grads
+
+    def train_step(state: TrainState, batch):
+        loss, drops, counts, grads = micro_grads(state.params, batch,
+                                                 state.router_bias)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.clip_norm)
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params, state.step)
+        params = apply_updates(state.params, updates)
+
+        router_bias = state.router_bias
+        if router_bias is not None and tcfg.bias_update and cfg.moe is not None:
+            # DeepSeek aux-free update from the realized per-layer loads
+            # (outside the gradient), vmapped over MoE layers.
+            speed = cfg.moe.bias_update_speed
+            is_moe_layer = counts.sum(axis=1) > 0
+            upd = jax.vmap(lambda b, c: update_router_bias(b, c, speed))(
+                router_bias, counts)
+            router_bias = jnp.where(is_moe_layer[:, None], upd, router_bias)
+        metrics = {
+            "loss": loss,
+            "grad_norm": gnorm,
+            "drops": drops,
+            "counts": counts,
+            "step": state.step,
+        }
+        return TrainState(params, opt_state, router_bias, state.step + 1), metrics
+
+    return train_step

@@ -1,0 +1,11 @@
+"""Shared test fixtures.  NOTE: never set xla_force_host_platform_device_count
+here -- smoke tests and benches must see 1 device; multi-device tests run in
+subprocesses (tests/helpers.py)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,153 @@
+"""EPLB/EPLB+/LPLB baselines + balancer dispatch + relay comm planning."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import balancer, metrics
+from repro.core import ref_planner as ref
+from repro.core.balancer import BalancerConfig
+from repro.core.comm_plan import build_relay_schedule, simulate
+from repro.core.eplb import (
+    LoadEMA,
+    eplb_plan,
+    eplb_replication_jit,
+    round_robin_reroute,
+    round_robin_reroute_jax,
+)
+from repro.core.lplb import lplb_plan
+
+
+def _case(rng, R=16, epr=4, alpha=1.2):
+    E = R * epr
+    lam = (rng.pareto(alpha, size=(R, E)) * 30).astype(np.int64)
+    home = np.repeat(np.arange(R), epr)
+    return lam, home, E, R
+
+
+def test_eplb_jax_matches_numpy(rng):
+    lam, home, E, R = _case(rng)
+    u, q, hosted = eplb_plan(lam, home, 2)
+    hosted_j = np.array(eplb_replication_jit(
+        jnp.array(lam.sum(0), jnp.float32), jnp.array(home), R, n_slot=2))
+    assert np.array_equal(hosted_j, hosted)
+    q_j = np.array(round_robin_reroute_jax(jnp.array(lam),
+                                           jnp.array(hosted)))
+    assert np.array_equal(q_j, q)
+
+
+def test_round_robin_conserves(rng):
+    lam, home, E, R = _case(rng)
+    _, q, hosted = eplb_plan(lam, home, 2)
+    assert np.array_equal(q.sum(axis=2), lam)
+    # tokens only go to hosting instances
+    assert (q.sum(axis=0)[~hosted] == 0).all()
+
+
+def test_quota_beats_eplb_plus_on_skew(rng):
+    """Paper Table 4: quota-driven planning yields lower post-imbalance and
+    fewer consumed slots than exact-load EPLB."""
+    wins, slot_wins = 0, 0
+    for _ in range(10):
+        lam, home, E, R = _case(rng, alpha=1.1)
+        u_e, _, hosted_e = eplb_plan(lam, home, 2)
+        p = ref.solve(lam, home, 2, u_min=8)
+        imb_eplb = metrics.imbalance(u_e.sum(axis=0))
+        imb_ours = metrics.imbalance(p.u.sum(axis=0))
+        wins += imb_ours <= imb_eplb + 1e-9
+        slots_eplb = (hosted_e.sum() - E)
+        slots_ours = (p.u.T > 0).sum() - (p.u.sum(0) > 0).shape[0]
+        slot_wins += ((p.x >= 0).sum() <= slots_eplb)
+    assert wins >= 8, f"quota won only {wins}/10 on imbalance"
+    assert slot_wins >= 8, f"quota used more slots in {10-slot_wins}/10"
+
+
+def test_lplb_one_replica_budget(rng):
+    lam, home, E, R = _case(rng)
+    u, hosted, tau = lplb_plan(lam, home, 2)
+    reps = hosted.sum(axis=1) - 1
+    assert (reps <= 1).all()
+    assert np.array_equal(u.sum(axis=1), lam.sum(axis=0))
+
+
+def test_ema_estimator():
+    ema = LoadEMA(4, decay=0.5)
+    ema.update(np.array([4, 0, 0, 0.0]))
+    ema.update(np.array([0, 4, 0, 0.0]))
+    assert np.allclose(ema.value, [2, 2, 0, 0])
+
+
+def test_balancer_modes_all_valid(rng):
+    lam, home, E, R = _case(rng, R=8)
+    lamj, homej = jnp.array(lam), jnp.array(home)
+    for mode in ["none", "ultraep", "eplb_plus", "eplb", "lplb", "ideal"]:
+        p = balancer.solve(lamj, homej, BalancerConfig(mode=mode, n_slot=2))
+        q = np.array(p.q)
+        assert np.array_equal(q.sum(axis=2), lam), mode
+        assert np.array_equal(q.sum(axis=0), np.array(p.u)), mode
+
+
+def test_stale_eplb_worse_than_exact(rng):
+    """Fig. 6: placement from stale loads leaves residual imbalance when
+    the distribution shifts."""
+    lam_old, home, E, R = _case(rng, alpha=1.1)
+    # Shift: rotate expert popularity so the stale estimate mismatches.
+    lam_new = np.roll(lam_old, E // 2, axis=1)
+    u_stale, _, _ = eplb_plan(lam_new, home, 2,
+                              lam_e_est=lam_old.sum(0).astype(np.float64))
+    u_exact, _, _ = eplb_plan(lam_new, home, 2)
+    assert (metrics.imbalance(u_stale.sum(0))
+            >= metrics.imbalance(u_exact.sum(0)) - 1e-9)
+
+
+# --------------------------------------------------------- relay trees --
+
+def test_relay_reduces_max_send(rng):
+    E, R = 32, 16
+    home = np.repeat(np.arange(R), 2)
+    hosted = np.zeros((E, R), bool)
+    hosted[np.arange(E), home] = True
+    hosted[0, :] = True  # expert 0: replicas everywhere (fan-out 15)
+    sched_relay = build_relay_schedule(hosted, home, 64 << 20,
+                                       relay_threshold=3)
+    sched_flat = build_relay_schedule(hosted, home, 64 << 20,
+                                      relay_threshold=10 ** 9)
+    assert sched_relay.max_send_volume < sched_flat.max_send_volume
+    t_relay = simulate(sched_relay, num_ranks=R, link_bandwidth=100e9)
+    t_flat = simulate(sched_flat, num_ranks=R, link_bandwidth=100e9)
+    assert t_relay < t_flat
+
+
+def test_relay_latency_flat_in_fanout():
+    """Fig. 16: with relays, hot-expert distribution latency grows ~flat
+    with fan-out, while the no-relay variant grows linearly."""
+    R = 64
+    home = np.repeat(np.arange(R), 1)
+    times_relay, times_flat = [], []
+    for fanout in (8, 16, 32, 56):
+        hosted = np.zeros((R, R), bool)
+        hosted[np.arange(R), home] = True
+        hosted[0, 1:fanout + 1] = True
+        s_r = build_relay_schedule(hosted, home, 64 << 20, relay_threshold=3)
+        s_f = build_relay_schedule(hosted, home, 64 << 20,
+                                   relay_threshold=10 ** 9)
+        times_relay.append(simulate(s_r, num_ranks=R, link_bandwidth=100e9))
+        times_flat.append(simulate(s_f, num_ranks=R, link_bandwidth=100e9))
+    growth_relay = times_relay[-1] / times_relay[0]
+    growth_flat = times_flat[-1] / times_flat[0]
+    assert growth_flat > 4.0                 # ~linear in fan-out (7x/7)
+    assert growth_relay < 0.75 * growth_flat  # relay ~sqrt(F) scaling
+    assert times_relay[-1] < 0.6 * times_flat[-1]  # big absolute win at F=56
+
+
+def test_relay_dependencies_chunk_pipelined():
+    R = 8
+    home = np.zeros(4, np.int64)
+    hosted = np.zeros((4, R), bool)
+    hosted[:, 0] = True
+    hosted[0, 1:8] = True
+    sched = build_relay_schedule(hosted, home, 8 << 20, relay_threshold=2)
+    stage2 = [e for e in sched.edges if e.stage == 1]
+    assert stage2, "expected relay stage-two edges"
+    for e in stage2:
+        dep = sched.edges[e.depends_on]
+        assert dep.stage == 0 and dep.dst == e.src and dep.expert == e.expert

@@ -1,0 +1,172 @@
+"""Model primitives: flash oracle, decode/prefill consistency, SSD math."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (
+    AttnConfig,
+    KVCache,
+    flash_ref,
+    gqa_attention,
+    gqa_decode,
+    gqa_prefill,
+    init_gqa,
+    init_mla,
+    mla_attention,
+    mla_decode,
+    mla_prefill,
+)
+from repro.models.ssm import (
+    SSMConfig,
+    SSMState,
+    _conv_channels,
+    init_ssm,
+    ssd_decode,
+    ssd_forward,
+    ssd_prefill,
+)
+
+B, S = 2, 36
+
+
+def _naive_attn(q, k, v, causal, rep):
+    kf = jnp.repeat(k, rep, 2)
+    vf = jnp.repeat(v, rep, 2)
+    d = q.shape[-1]
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kf) * d ** -0.5
+    if causal:
+        Sq = q.shape[1]
+        m = jnp.tril(jnp.ones((Sq, Sq), bool))
+        s = jnp.where(m[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, vf)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("unroll", [True, False])
+def test_flash_ref_matches_naive(causal, unroll):
+    H, Hkv, hd = 4, 2, 8
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, S, Hkv, hd))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, S, Hkv, hd))
+    out = flash_ref(q, k, v, causal=causal, block_kv=16, unroll=unroll)
+    ref = _naive_attn(q, k, v, causal, H // Hkv)
+    np.testing.assert_allclose(np.array(out), np.array(ref), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_gqa_prefill_decode_consistency():
+    cfg = AttnConfig(d_model=16, num_heads=4, num_kv_heads=2, head_dim=8,
+                     qkv_bias=True, qk_norm=True)
+    params = init_gqa(jax.random.PRNGKey(3), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(4), (B, S, 16))
+    x2 = jax.random.normal(jax.random.PRNGKey(5), (B, 1, 16))
+    y_full = gqa_attention(x, params, cfg, block_kv=16)
+    cache = KVCache(jnp.zeros((B, S + 4, 2, 8)), jnp.zeros((B, S + 4, 2, 8)),
+                    jnp.zeros((B,), jnp.int32))
+    ys = []
+    for c in range(3):
+        y_c, cache = gqa_prefill(x[:, c * 12:(c + 1) * 12], cache, params,
+                                 cfg, block_kv=16)
+        ys.append(y_c)
+    np.testing.assert_allclose(np.array(jnp.concatenate(ys, 1)),
+                               np.array(y_full), rtol=1e-4, atol=1e-4)
+    y_d, cache = gqa_decode(x2, cache, params, cfg)
+    y_ref = gqa_attention(jnp.concatenate([x, x2], 1), params, cfg,
+                          block_kv=16)[:, -1:]
+    np.testing.assert_allclose(np.array(y_d), np.array(y_ref), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_mla_prefill_decode_consistency():
+    cfg = AttnConfig(d_model=32, num_heads=4, num_kv_heads=4, head_dim=0,
+                     q_lora_rank=16, kv_lora_rank=24, qk_nope_dim=8,
+                     qk_rope_dim=4, v_head_dim=8)
+    params = init_mla(jax.random.PRNGKey(5), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(6), (B, S, 32))
+    x2 = jax.random.normal(jax.random.PRNGKey(7), (B, 1, 32))
+    y_full = mla_attention(x, params, cfg, block_kv=16)
+    cache = KVCache(jnp.zeros((B, S + 4, 24)), jnp.zeros((B, S + 4, 4)),
+                    jnp.zeros((B,), jnp.int32))
+    ys = []
+    for c in range(3):
+        y_c, cache = mla_prefill(x[:, c * 12:(c + 1) * 12], cache, params,
+                                 cfg, block_kv=16)
+        ys.append(y_c)
+    np.testing.assert_allclose(np.array(jnp.concatenate(ys, 1)),
+                               np.array(y_full), rtol=1e-4, atol=1e-4)
+    y_d, _ = mla_decode(x2, cache, params, cfg)
+    y_ref = mla_attention(jnp.concatenate([x, x2], 1), params, cfg,
+                          block_kv=16)[:, -1:]
+    np.testing.assert_allclose(np.array(y_d), np.array(y_ref), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_ragged_decode_batch():
+    """Per-sequence cache lengths: two sequences at different positions
+    decode correctly in one batch."""
+    cfg = AttnConfig(d_model=16, num_heads=2, num_kv_heads=2, head_dim=8)
+    params = init_gqa(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 16))
+    # seq 0 has 12 tokens of context, seq 1 only 4.
+    c0 = KVCache(jnp.zeros((1, 16, 2, 8)), jnp.zeros((1, 16, 2, 8)),
+                 jnp.zeros((1,), jnp.int32))
+    _, c0 = gqa_prefill(x[:1], c0, params, cfg, block_kv=16)
+    c1 = KVCache(jnp.zeros((1, 16, 2, 8)), jnp.zeros((1, 16, 2, 8)),
+                 jnp.zeros((1,), jnp.int32))
+    _, c1 = gqa_prefill(x[1:, :4], c1, params, cfg, block_kv=16)
+    cache = KVCache(jnp.concatenate([c0.k, c1.k]),
+                    jnp.concatenate([c0.v, c1.v]),
+                    jnp.concatenate([c0.length, c1.length]))
+    x2 = jax.random.normal(jax.random.PRNGKey(2), (2, 1, 16))
+    y, _ = gqa_decode(x2, cache, params, cfg)
+    # references with per-sequence contexts
+    y0 = gqa_attention(jnp.concatenate([x[:1], x2[:1]], 1), params,
+                       cfg)[:, -1:]
+    y1 = gqa_attention(jnp.concatenate([x[1:, :4], x2[1:]], 1), params,
+                       cfg)[:, -1:]
+    np.testing.assert_allclose(np.array(y[0]), np.array(y0[0]), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.array(y[1]), np.array(y1[0]), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_ssd_chunked_equals_sequential():
+    cfg = SSMConfig(d_model=24, d_inner=32, headdim=8, d_state=16,
+                    n_groups=2, chunk=8)
+    params = init_ssm(jax.random.PRNGKey(7), cfg)
+    L = 32
+    x = jax.random.normal(jax.random.PRNGKey(8), (B, L, 24)) * 0.5
+    y_chunk, final = ssd_forward(x, params, cfg)
+    st = SSMState(jnp.zeros((B, cfg.n_heads, cfg.d_state, cfg.headdim)),
+                  jnp.zeros((B, cfg.d_conv - 1, _conv_channels(cfg))),
+                  jnp.zeros((B,), jnp.int32))
+    ys = []
+    for t in range(L):
+        y_t, st = ssd_decode(x[:, t:t + 1], st, params, cfg)
+        ys.append(y_t)
+    np.testing.assert_allclose(np.array(jnp.concatenate(ys, 1)),
+                               np.array(y_chunk), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.array(final), np.array(st.s), rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_ssd_prefill_continues_state():
+    cfg = SSMConfig(d_model=24, d_inner=32, headdim=8, d_state=16,
+                    n_groups=2, chunk=8)
+    params = init_ssm(jax.random.PRNGKey(7), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(8), (B, 32, 24)) * 0.5
+    y_full, final = ssd_forward(x, params, cfg)
+    st = SSMState(jnp.zeros((B, cfg.n_heads, cfg.d_state, cfg.headdim)),
+                  jnp.zeros((B, cfg.d_conv - 1, _conv_channels(cfg))),
+                  jnp.zeros((B,), jnp.int32))
+    ys = []
+    for c in range(2):
+        y_c, st = ssd_prefill(x[:, c * 16:(c + 1) * 16], st, params, cfg)
+        ys.append(y_c)
+    np.testing.assert_allclose(np.array(jnp.concatenate(ys, 1)),
+                               np.array(y_full), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.array(st.s), np.array(final), rtol=2e-4,
+                               atol=2e-4)
