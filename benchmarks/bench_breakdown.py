@@ -1,9 +1,14 @@
 """Fig. 13: MoE forward/backward latency breakdown per balancer.
 
 Times the individual stages of one MoE layer -- gate, plan solve, weight
-distribution, reroute+dispatch, grouped FFN, combine -- on CPU (reduced
-sizes), plus the backward pass as a whole.  The structure mirrors Eq. 1:
-T_solve + max(T_reroute, T_distr) + T_a2a + T_moe.
+distribution, reroute+dispatch, bucket, grouped FFN, combine -- on CPU
+(reduced sizes), plus the backward pass as a whole.  The structure mirrors
+Eq. 1: T_solve + max(T_reroute, T_distr) + T_a2a + T_moe.
+
+Also the perf gate for the single-sort dispatch engine (DESIGN.md S2): the
+dispatch+bucket+combine permutation pipeline is timed for both
+``dispatch_impl="fused"`` and ``"reference"`` and the speedup is reported
+(acceptance: >= 1.5x at T=2048, E=64 on CPU).
 """
 
 from __future__ import annotations
@@ -18,7 +23,13 @@ import jax.numpy as jnp
 from repro.core import balancer as bal
 from repro.core.balancer import BalancerConfig
 from repro.core.layout import ExpertLayout, physical_slot_of
-from repro.moe.dispatch import bucket_by_slot, dispatch_tokens
+from repro.moe import permute as fperm
+from repro.moe.dispatch import (
+    bucket_by_slot,
+    combine_tokens,
+    dispatch_tokens,
+    unbucket,
+)
 from repro.moe.expert import grouped_ffn
 from repro.moe.gating import GatingConfig, gate
 from repro.moe.layer import MoEConfig, init_moe_params, moe_layer_local
@@ -34,11 +45,92 @@ def _time(f, *args, iters=10):
     return (time.perf_counter() - t0) / iters * 1e3  # ms
 
 
+def _cfg(mode, impl, *, E, k, D, F, T):
+    gcfg = GatingConfig(num_experts=E, top_k=k)
+    return MoEConfig(gating=gcfg, balancer=BalancerConfig(mode=mode, n_slot=2),
+                     d_model=D, d_ff=F, ep_size=1, cap_pair=T * k,
+                     cap_slot=T * k, dispatch_impl=impl)
+
+
+def permutation_pipelines(quiet=False, E=64, k=4, D=64, F=128, T=2048,
+                          mode="ultraep", iters=10):
+    """Dispatch+bucket+combine for both engines (grouped FFN excluded).
+
+    The FFN cost is identical across engines, so the permutation pipeline is
+    isolated: send-buffer build -> slot bucketing -> inverse path -> weighted
+    combine, with the returned buffers standing in for expert outputs.
+    """
+    cfg = _cfg(mode, "fused", E=E, k=k, D=D, F=F, T=T)
+    x = jax.random.normal(jax.random.PRNGKey(1), (T, D))
+    params = init_moe_params(jax.random.PRNGKey(0), cfg)
+    layout = cfg.layout
+    home = layout.home()
+    num_slots = layout.slots_per_rank
+    go = gate(x, params.router, cfg.gating)
+    plan = bal.solve(go.counts[None], home, cfg.balancer)
+    slot_of_all = physical_slot_of(layout, plan.x)
+    cap_pair = cap_slot = T * k
+
+    @jax.jit
+    def pipe_ref(x, q_row, weights):
+        disp = dispatch_tokens(x, go.expert_ids, q_row, cap_pair=cap_pair)
+        xs, valid, back, _ = bucket_by_slot(
+            disp.send_x, disp.send_e, slot_of_all[0], num_slots=num_slots,
+            cap_slot=cap_slot)
+        ret = unbucket(xs, valid, back, (1, cap_pair, D))
+        return combine_tokens(ret, disp, weights, T)
+
+    @jax.jit
+    def pipe_fused(x, cum_q_row, weights):
+        disp = fperm.fused_dispatch(x, go.expert_ids, cum_q_row, slot_of_all,
+                                    num_slots=num_slots, cap_pair=cap_pair)
+        xs, valid, meta, _ = fperm.fused_bucket(
+            disp.send_x, disp.send_counts, num_slots=num_slots,
+            cap_slot=cap_slot)
+        ret = fperm.fused_unbucket(xs, meta)
+        return fperm.fused_combine(ret, disp, weights)
+
+    t_ref = _time(pipe_ref, x, plan.q[0], go.weights, iters=iters)
+    t_fused = _time(pipe_fused, x, plan.cum_q[0], go.weights, iters=iters)
+
+    # Per-stage split (each stage jitted on concrete upstream outputs).
+    disp_r = dispatch_tokens(x, go.expert_ids, plan.q[0], cap_pair=cap_pair)
+    disp_f = fperm.fused_dispatch(x, go.expert_ids, plan.cum_q[0],
+                                  slot_of_all, num_slots=num_slots,
+                                  cap_pair=cap_pair)
+    stage = {
+        "dispatch_ref_ms": _time(jax.jit(lambda x, q: dispatch_tokens(
+            x, go.expert_ids, q, cap_pair=cap_pair).send_x), x, plan.q[0],
+            iters=iters),
+        "dispatch_fused_ms": _time(jax.jit(lambda x, cq: fperm.fused_dispatch(
+            x, go.expert_ids, cq, slot_of_all, num_slots=num_slots,
+            cap_pair=cap_pair).send_x), x, plan.cum_q[0], iters=iters),
+        "bucket_ref_ms": _time(jax.jit(lambda rx, re: bucket_by_slot(
+            rx, re, slot_of_all[0], num_slots=num_slots,
+            cap_slot=cap_slot)[0]), disp_r.send_x, disp_r.send_e,
+            iters=iters),
+        "bucket_fused_ms": _time(jax.jit(lambda rx, rc: fperm.fused_bucket(
+            rx, rc, num_slots=num_slots, cap_slot=cap_slot)[0]),
+            disp_f.send_x, disp_f.send_counts, iters=iters),
+    }
+    rows = dict(
+        pipeline_ref_ms=t_ref,
+        pipeline_fused_ms=t_fused,
+        pipeline_speedup=t_ref / t_fused,
+        **stage,
+    )
+    if not quiet:
+        print(f"\n== Permutation pipeline: fused vs reference (mode={mode}, "
+              f"T={T}, E={E}, k={k}) ==")
+        for k_, v in rows.items():
+            unit = " ms" if k_.endswith("ms") else "x"
+            print(f"  {k_:22s} {v:8.3f}{unit}")
+    return rows
+
+
 def run(quiet=False, E=64, k=4, D=64, F=128, T=2048, mode="ultraep"):
     gcfg = GatingConfig(num_experts=E, top_k=k)
-    cfg = MoEConfig(gating=gcfg, balancer=BalancerConfig(mode=mode, n_slot=2),
-                    d_model=D, d_ff=F, ep_size=1, cap_pair=T * k,
-                    cap_slot=T * k)
+    cfg = _cfg(mode, "fused", E=E, k=k, D=D, F=F, T=T)
     params = init_moe_params(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (T, D))
     layout = cfg.layout
@@ -51,13 +143,18 @@ def run(quiet=False, E=64, k=4, D=64, F=128, T=2048, mode="ultraep"):
     t_gate = _time(jax.jit(lambda x: gate(x, params.router, gcfg).counts), x)
     t_solve = _time(jax.jit(
         lambda l: bal.solve(l, home, cfg.balancer).u), lam)
-    t_disp = _time(jax.jit(lambda x, q: dispatch_tokens(
-        x, go.expert_ids, q, cap_pair=cfg.cap_pair).send_x), x, plan.q[0])
 
-    disp = dispatch_tokens(x, go.expert_ids, plan.q[0], cap_pair=cfg.cap_pair)
-    slot_of = physical_slot_of(layout, plan.x)[0]
-    xs, valid, back, _ = bucket_by_slot(disp.send_x, disp.send_e, slot_of,
-                                        num_slots=E + 2, cap_slot=cfg.cap_slot)
+    num_slots = layout.slots_per_rank
+    slot_of_all = physical_slot_of(layout, plan.x)
+    t_disp = _time(jax.jit(lambda x, cq: fperm.fused_dispatch(
+        x, go.expert_ids, cq, slot_of_all, num_slots=num_slots,
+        cap_pair=cfg.cap_pair).send_x), x, plan.cum_q[0])
+
+    disp = fperm.fused_dispatch(x, go.expert_ids, plan.cum_q[0], slot_of_all,
+                                num_slots=num_slots, cap_pair=cfg.cap_pair)
+    xs, valid, _meta, _ = fperm.fused_bucket(
+        disp.send_x, disp.send_counts, num_slots=num_slots,
+        cap_slot=cfg.cap_slot)
     w1 = jnp.concatenate([params.w1, jnp.zeros((2, D, F))])
     w3 = jnp.concatenate([params.w3, jnp.zeros((2, D, F))])
     w2 = jnp.concatenate([params.w2, jnp.zeros((2, F, D))])
@@ -72,11 +169,13 @@ def run(quiet=False, E=64, k=4, D=64, F=128, T=2048, mode="ultraep"):
     rows = dict(gate_ms=t_gate, solve_ms=t_solve, dispatch_ms=t_disp,
                 grouped_ffn_ms=t_ffn, full_fwd_ms=t_fwd, full_bwd_ms=t_bwd,
                 solve_frac=t_solve / t_fwd)
+    rows.update(permutation_pipelines(quiet=quiet, E=E, k=k, D=D, F=F, T=T,
+                                      mode=mode))
     if not quiet:
         print(f"\n== Fig. 13: MoE layer breakdown (mode={mode}, T={T}, "
               f"E={E}) ==")
         for k_, v in rows.items():
-            print(f"  {k_:16s} {v:8.3f}" + (" ms" if k_.endswith("ms")
+            print(f"  {k_:22s} {v:8.3f}" + (" ms" if k_.endswith("ms")
                                             else ""))
     return rows
 

@@ -1,10 +1,15 @@
 """Benchmark runner: one section per paper table/figure.
 
-Prints a ``name,value,unit`` CSV summary at the end for machine parsing.
+Prints a ``name,value,unit`` CSV summary at the end for machine parsing and
+writes ``BENCH_breakdown.json`` (per-stage dispatch/bucket/combine ms plus
+the fused-vs-reference pipeline speedup) so the perf trajectory is recorded
+across PRs.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
@@ -52,6 +57,14 @@ def main() -> None:
     br = bench_breakdown.run()
     csv.append(("breakdown.solve_frac_of_fwd", f"{br['solve_frac']*100:.1f}",
                 "%"))
+    csv.append(("breakdown.permute_speedup_fused_vs_ref",
+                f"{br['pipeline_speedup']:.2f}", "x"))
+    out_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            os.pardir, "BENCH_breakdown.json")
+    with open(os.path.abspath(out_path), "w") as f:
+        json.dump({k: (float(v) if isinstance(v, (int, float, np.floating))
+                       else v) for k, v in br.items()}, f, indent=2)
+        f.write("\n")
 
     # -- Fig. 14: memory --------------------------------------------------
     mem = bench_memory.run()

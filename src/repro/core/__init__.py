@@ -4,6 +4,7 @@ from repro.core.balancer import BalancerConfig, no_balance_plan, solve
 from repro.core.layout import ExpertLayout
 from repro.core.planner import (
     Plan,
+    cumulative_quota,
     occurrence_index,
     slot_assignment,
     solve_plan,
@@ -16,6 +17,7 @@ __all__ = [
     "BalancerConfig",
     "ExpertLayout",
     "Plan",
+    "cumulative_quota",
     "no_balance_plan",
     "occurrence_index",
     "slot_assignment",

@@ -51,6 +51,7 @@ def _finish_plan(lam: jax.Array, u: jax.Array, q: jax.Array, home: jax.Array,
         u=u.astype(_I32), q=q.astype(_I32), x=x,
         tau=jnp.max(u.sum(axis=0)).astype(_I32), hosted=hosted,
         pre_max=jnp.max(ell), post_max=jnp.max(u.sum(axis=0)),
+        cum_q=planner.cumulative_quota(q), cum_u=planner.cumulative_quota(u),
     )
 
 

@@ -35,7 +35,8 @@ import jax
 import jax.numpy as jnp
 
 __all__ = ["Plan", "solve_replication", "solve_reroute", "solve_plan",
-           "slot_assignment", "token_targets", "occurrence_index"]
+           "slot_assignment", "token_targets", "occurrence_index",
+           "cumulative_quota"]
 
 _I32 = jnp.int32
 
@@ -50,6 +51,8 @@ class Plan(NamedTuple):
     hosted: jax.Array     # (R, E) bool physical-instance indicator
     pre_max: jax.Array    # () int32 pre-balance max rank load
     post_max: jax.Array   # () int32 post-balance max rank load
+    cum_q: jax.Array      # (R, E, R) int32 inclusive cumsum of q over dst rank
+    cum_u: jax.Array      # (E, R) int32 inclusive cumsum of u over instance rank
 
 
 def _expert_order(lam_e: jax.Array, home: jax.Array, R: int) -> jax.Array:
@@ -308,21 +311,43 @@ def occurrence_index(expert_ids: jax.Array) -> jax.Array:
     return jnp.zeros((n,), _I32).at[order].set(occ_sorted)
 
 
+def cumulative_quota(q_or_u: jax.Array) -> jax.Array:
+    """Inclusive cumsum over the trailing (destination-rank) axis.
+
+    The dispatch engine maps item occurrence j of expert e to the rank whose
+    cumulative quota first exceeds j; exporting the table from the plan solve
+    keeps the per-layer hot path free of redundant cumsums (DESIGN.md S2).
+    """
+    return jnp.cumsum(q_or_u.astype(_I32), axis=-1)
+
+
 def token_targets(
-    expert_ids: jax.Array, q_row: jax.Array, *, valid: jax.Array | None = None
+    expert_ids: jax.Array, q_row: jax.Array | None = None, *,
+    valid: jax.Array | None = None, cumq: jax.Array | None = None,
+    occ: jax.Array | None = None
 ) -> jax.Array:
     """Per-item destination rank via cumulative-quota upper-bound lookup (S5.2).
 
+    This is the single definition of the destination semantics; the fused
+    dispatch engine (:mod:`repro.moe.permute`) calls it with precomputed
+    ``cumq``/``occ`` so the lookup never diverges between engines.
+
     Args:
       expert_ids: (T,) logical expert of each routing item on this source rank.
-      q_row: (E, R) this rank's reroute split (``q[r]`` of the plan).
+      q_row: (E, R) this rank's reroute split (``q[r]`` of the plan); may be
+        None when ``cumq`` is given.
       valid: optional (T,) mask; invalid items get target -1.
+      cumq: optional precomputed ``cumulative_quota(q_row)`` (plan.cum_q[r]).
+      occ: optional precomputed ``occurrence_index(expert_ids)``.
 
     Returns:
       (T,) int32 destination rank per item.
     """
-    cumq = jnp.cumsum(q_row.astype(_I32), axis=1)  # (E, R) inclusive
-    j = occurrence_index(expert_ids)
+    if cumq is None:
+        if q_row is None:
+            raise ValueError("token_targets needs q_row or cumq")
+        cumq = cumulative_quota(q_row)  # (E, R) inclusive
+    j = occurrence_index(expert_ids) if occ is None else occ
     cum_rows = cumq[expert_ids]  # (T, R)
     tgt = jnp.sum(cum_rows <= j[:, None], axis=1).astype(_I32)
     tgt = jnp.minimum(tgt, cumq.shape[1] - 1)
@@ -368,4 +393,6 @@ def solve_plan(
         hosted=hosted,
         pre_max=jnp.max(ell),
         post_max=jnp.max(u.sum(axis=0)),
+        cum_q=cumulative_quota(q),
+        cum_u=cumulative_quota(u),
     )

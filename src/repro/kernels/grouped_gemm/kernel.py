@@ -22,7 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["grouped_matmul_kernel", "grouped_matmul_pallas"]
+__all__ = ["grouped_matmul_kernel", "grouped_matmul_pallas",
+           "grouped_swiglu_kernel", "grouped_swiglu_pallas"]
 
 
 def grouped_matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
@@ -39,6 +40,70 @@ def grouped_matmul_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_steps: int):
     @pl.when(pl.program_id(3) == k_steps - 1)
     def _store():
         o_ref[0, ...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def grouped_swiglu_kernel(x_ref, w1_ref, w3_ref, o_ref, acc_h, acc_g, *,
+                          k_steps: int):
+    """Fused grouped SwiGLU: ``silu(x@w1) * (x@w3)`` in one invocation.
+
+    The unfused path runs two grouped GEMMs that each stream the same x block
+    out of HBM and round-trip their (G, M, N) intermediates before the
+    elementwise gate.  Here one x block feeds both MXU contractions, the two
+    fp32 accumulators live in VMEM across the K steps, and the silu gate is
+    applied on the final K step -- the h/g intermediates never touch HBM.
+    """
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_h[...] = jnp.zeros_like(acc_h)
+        acc_g[...] = jnp.zeros_like(acc_g)
+
+    x_blk = x_ref[0]
+    acc_h[...] += jax.lax.dot_general(
+        x_blk, w1_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_g[...] += jax.lax.dot_general(
+        x_blk, w3_ref[0],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(3) == k_steps - 1)
+    def _store():
+        h = acc_h[...]
+        act = h * jax.lax.logistic(h) * acc_g[...]
+        o_ref[0, ...] = act.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "interpret"))
+def grouped_swiglu_pallas(x: jax.Array, w1: jax.Array, w3: jax.Array, *,
+                          bm: int = 128, bn: int = 128, bk: int = 128,
+                          interpret: bool = False) -> jax.Array:
+    """x: (G, M, K), w1/w3: (G, K, N) -> silu(x@w1) * (x@w3): (G, M, N)."""
+    G, M, K = x.shape
+    _, _, N = w1.shape
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    if M % bm or N % bn or K % bk:
+        raise ValueError(f"dims ({M},{N},{K}) not divisible by blocks "
+                         f"({bm},{bn},{bk})")
+    k_steps = K // bk
+    grid = (G, M // bm, N // bn, k_steps)
+    return pl.pallas_call(
+        functools.partial(grouped_swiglu_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda g, i, j, k: (g, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda g, i, j, k: (g, k, j)),
+            pl.BlockSpec((1, bk, bn), lambda g, i, j, k: (g, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda g, i, j, k: (g, i, j)),
+        out_shape=jax.ShapeDtypeStruct((G, M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w1, w3)
 
 
 @functools.partial(jax.jit,

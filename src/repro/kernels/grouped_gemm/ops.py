@@ -5,10 +5,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.grouped_gemm.kernel import grouped_matmul_pallas
-from repro.kernels.grouped_gemm.ref import grouped_matmul_ref
+from repro.kernels.grouped_gemm.kernel import (
+    grouped_matmul_pallas,
+    grouped_swiglu_pallas,
+)
+from repro.kernels.grouped_gemm.ref import grouped_matmul_ref, grouped_swiglu_ref
 
-__all__ = ["grouped_matmul"]
+__all__ = ["grouped_matmul", "grouped_swiglu"]
 
 
 def _pad_to(v: int, m: int) -> int:
@@ -34,5 +37,31 @@ def grouped_matmul(x: jax.Array, w: jax.Array, *, bm: int = 128,
     xp = jnp.pad(x, ((0, 0), (0, Mp - M), (0, Kp - K)))
     wp = jnp.pad(w, ((0, 0), (0, Kp - K), (0, Np - N)))
     out = grouped_matmul_pallas(xp, wp, bm=bm2, bn=bn2, bk=bk2,
+                                interpret=interpret)
+    return out[:, :M, :N]
+
+
+def grouped_swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, *,
+                   bm: int = 128, bn: int = 128, bk: int = 128) -> jax.Array:
+    """Fused ``silu(x@w1) * (x@w3)`` with automatic padding to block multiples.
+
+    One kernel invocation reads each x block once for both contractions and
+    keeps the h/g intermediates in VMEM (vs two grouped GEMMs + an
+    elementwise pass that round-trips them through HBM).  Pallas on TPU
+    backends, interpret mode on CPU; jnp oracle for sub-tile shapes.
+    Zero-padding is safe: silu(0) * 0 == 0 on the padded rows/cols.
+    """
+    G, M, K = x.shape
+    _, _, N = w1.shape
+    if M * N * K < 128 ** 3:  # tiny: tiling overhead dominates
+        return grouped_swiglu_ref(x, w1, w3)
+    interpret = jax.default_backend() != "tpu"
+    bm2, bn2, bk2 = min(bm, _pad_to(M, 8)), min(bn, _pad_to(N, 128)), \
+        min(bk, _pad_to(K, 128))
+    Mp, Np, Kp = _pad_to(M, bm2), _pad_to(N, bn2), _pad_to(K, bk2)
+    xp = jnp.pad(x, ((0, 0), (0, Mp - M), (0, Kp - K)))
+    w1p = jnp.pad(w1, ((0, 0), (0, Kp - K), (0, Np - N)))
+    w3p = jnp.pad(w3, ((0, 0), (0, Kp - K), (0, Np - N)))
+    out = grouped_swiglu_pallas(xp, w1p, w3p, bm=bm2, bn=bn2, bk=bk2,
                                 interpret=interpret)
     return out[:, :M, :N]

@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["grouped_matmul_ref"]
+__all__ = ["grouped_matmul_ref", "grouped_swiglu_ref"]
 
 
 def grouped_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
@@ -13,3 +13,12 @@ def grouped_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
     out = jnp.einsum("gmk,gkn->gmn", x.astype(jnp.float32),
                      w.astype(jnp.float32))
     return out.astype(x.dtype)
+
+
+def grouped_swiglu_ref(x: jax.Array, w1: jax.Array, w3: jax.Array) -> jax.Array:
+    """silu(x@w1) * (x@w3) per group, fp32 accumulation and gating."""
+    h = jnp.einsum("gmk,gkn->gmn", x.astype(jnp.float32),
+                   w1.astype(jnp.float32))
+    g = jnp.einsum("gmk,gkn->gmn", x.astype(jnp.float32),
+                   w3.astype(jnp.float32))
+    return (jax.nn.silu(h) * g).astype(x.dtype)

@@ -53,6 +53,7 @@ class RuntimeConfig:
     cf_slot: float = 2.0
     distribute_chunks: int = 1
     use_kernel: bool = False
+    dispatch_impl: str = "fused"   # "fused" | "reference" MoE dispatch engine
     block_kv: int = 512
     dtype: Any = jnp.float32
     remat: bool = True
@@ -171,7 +172,7 @@ def moe_config(cfg: ModelConfig, rcfg: RuntimeConfig, pctx: ParallelCtx,
         ep_size=ep, cap_pair=cap_pair, cap_slot=cap_slot,
         n_shared_experts=m.n_shared_experts, shared_d_ff=m.shared_d_ff,
         distribute_chunks=rcfg.distribute_chunks, use_kernel=rcfg.use_kernel,
-        dispatch_mode=dispatch_mode,
+        dispatch_mode=dispatch_mode, dispatch_impl=rcfg.dispatch_impl,
     )
 
 

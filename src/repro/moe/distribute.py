@@ -25,7 +25,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["replica_selector", "materialize_replicas"]
+__all__ = ["replica_selector", "select_local_replicas", "materialize_replicas"]
 
 
 def replica_selector(x_slots_flat: jax.Array, local_expert_base: jax.Array,
@@ -34,7 +34,11 @@ def replica_selector(x_slots_flat: jax.Array, local_expert_base: jax.Array,
 
     ``x_slots_flat`` is the flattened plan slot table (R*N_slot,) of logical
     expert ids (-1 = empty); ``local_expert_base`` is this rank's first main
-    expert id.  Empty slots select nothing.
+    expert id.  Empty slots select nothing.  Kept as the reference semantics
+    for :func:`select_local_replicas` (the hot path uses the gather form: the
+    dense ``je,edf->jdf`` einsum is an (R*N_slot, E_local) matmul over the
+    full weight tensor, where a masked row gather moves only the selected
+    rows).
     """
     local_idx = x_slots_flat - local_expert_base  # (R*N_slot,)
     in_range = (local_idx >= 0) & (local_idx < experts_per_rank)
@@ -42,6 +46,25 @@ def replica_selector(x_slots_flat: jax.Array, local_expert_base: jax.Array,
         jnp.where(in_range, local_idx, 0), experts_per_rank, dtype=jnp.float32
     )
     return onehot * in_range[:, None].astype(jnp.float32)
+
+
+def select_local_replicas(w_local: jax.Array, x_slots_flat: jax.Array,
+                          local_expert_base: jax.Array) -> jax.Array:
+    """(R*N_slot, D, F) partial replica tensor via masked ``jnp.take``.
+
+    Equals ``einsum('je,edf->jdf', replica_selector(...), w_local)`` but as a
+    gather: slots bound to one of this rank's mains copy that expert's rows,
+    every other slot contributes zeros (so the cross-rank psum still sums to
+    exactly one home contribution per slot).  The transpose under ``jax.grad``
+    is a segment-sum of replica gradients onto mains -- the same reduction
+    the one-hot matmul transposed into.
+    """
+    epr = w_local.shape[0]
+    local_idx = x_slots_flat - local_expert_base          # (R*N_slot,)
+    in_range = (local_idx >= 0) & (local_idx < epr)
+    rows = jnp.take(w_local, jnp.clip(local_idx, 0, epr - 1), axis=0)
+    return jnp.where(in_range[:, None, None], rows,
+                     jnp.zeros((), w_local.dtype))
 
 
 def materialize_replicas(
@@ -72,15 +95,13 @@ def materialize_replicas(
 
     if axis_name is None:
         # Single-rank EP group: replicas are local (or empty).
-        sel = replica_selector(flat, jnp.asarray(0), epr)  # base 0
-        rep = jnp.einsum("je,edf->jdf", sel.astype(w_local.dtype), w_local)
+        rep = select_local_replicas(w_local, flat, jnp.asarray(0, flat.dtype))
         return rep.reshape(R, n_slot, D, F)[0]
 
     base = (my_rank * epr).astype(flat.dtype)
-    sel = replica_selector(flat, base, epr).astype(w_local.dtype)
 
     if n_chunks <= 1:
-        partial = jnp.einsum("je,edf->jdf", sel, w_local)  # (R*n_slot, D, F)
+        partial = select_local_replicas(w_local, flat, base)
         rep = jax.lax.psum_scatter(
             partial.reshape(R, n_slot, D, F), axis_name, scatter_dimension=0,
             tiled=False,
@@ -93,7 +114,7 @@ def materialize_replicas(
     for c in range(n_chunks):
         lo = c * chunk
         w_c = jax.lax.dynamic_slice_in_dim(w_local, lo, min(chunk, F - lo), 2)
-        partial = jnp.einsum("je,edf->jdf", sel, w_c)
+        partial = select_local_replicas(w_c, flat, base)
         outs.append(
             jax.lax.psum_scatter(
                 partial.reshape(R, n_slot, D, w_c.shape[-1]), axis_name,

@@ -38,9 +38,9 @@ def grouped_ffn(
     if use_kernel:
         from repro.kernels.grouped_gemm import ops as gg
 
-        h = gg.grouped_matmul(xs, w1)
-        g = gg.grouped_matmul(xs, w3)
-        act = jax.nn.silu(h) * g
+        # Fused SwiGLU kernel: one pass reads xs once for both projections
+        # and gates in VMEM; only the down projection is a second GEMM.
+        act = gg.grouped_swiglu(xs, w1, w3)
         out = gg.grouped_matmul(act, w2)
     else:
         h = jnp.einsum("gcd,gdf->gcf", xs, w1)

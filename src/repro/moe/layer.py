@@ -31,6 +31,14 @@ from repro.moe.dispatch import (
     unbucket,
 )
 from repro.moe.distribute import materialize_replicas
+from repro.moe.permute import (
+    fused_bucket,
+    fused_combine,
+    fused_dispatch,
+    fused_replicated_bucket,
+    fused_replicated_combine,
+    fused_unbucket,
+)
 from repro.moe.expert import grouped_ffn
 from repro.moe.gating import GateOut, GatingConfig, gate
 from repro.moe.reference import swiglu
@@ -59,6 +67,9 @@ class MoEConfig:
     # exact reference); each rank computes the quota-assigned share of items
     # for its hosted slots and the outputs are psum-combined.  No token
     # all_to_all, no pair capacities, no drops at pair granularity.
+    dispatch_impl: str = "fused"   # "fused" (single-sort permutation engine,
+    # repro.moe.permute) | "reference" (multi-sort scatter path,
+    # repro.moe.dispatch -- kept as the equivalence oracle)
 
     @property
     def layout(self) -> ExpertLayout:
@@ -149,6 +160,8 @@ def moe_layer_local(
     Returns:
       (y, aux_loss, stats) with y: (T_local, D).
     """
+    if cfg.dispatch_impl not in ("fused", "reference"):
+        raise ValueError(f"unknown dispatch_impl: {cfg.dispatch_impl!r}")
     T, D = x.shape
     layout = cfg.layout
     R = cfg.ep_size
@@ -195,24 +208,35 @@ def moe_layer_local(
         # Tokens identical on every EP rank (decode / exact-reference path):
         # item j of expert e is owned by the instance whose cumulative quota
         # covers j; this rank computes its share and results are psum-merged.
-        from repro.core.planner import token_targets as _tt
-
-        items_e = gate_out.expert_ids.reshape(-1)
-        owner = _tt(items_e, plan.u)  # (T*k,): u is the single-source split
-        mine = owner == my
-        recv_e = jnp.where(mine, items_e, -1)[None, :]      # (1, T*k)
-        recv_x = jnp.repeat(x, cfg.gating.top_k, axis=0)[None, :, :]
         slot_of = slot_of_all[my]
-        xs, valid, back_idx, slot_drops = bucket_by_slot(
-            recv_x, recv_e, slot_of, num_slots=num_slots, cap_slot=cfg.cap_slot
-        )
-        out = grouped_ffn(xs, valid, w1_all, w3_all, w2_all,
-                          use_kernel=cfg.use_kernel)
-        ret = unbucket(out, valid, back_idx, (1, T * cfg.gating.top_k, D))
-        flat_w = gate_out.weights.reshape(-1)
-        items_t = jnp.repeat(jnp.arange(T, dtype=_I32), cfg.gating.top_k)
-        vals = ret[0] * flat_w[:, None].astype(ret.dtype)
-        y = jnp.zeros((T, D), ret.dtype).at[items_t].add(vals)
+        if cfg.dispatch_impl == "fused":
+            rb = fused_replicated_bucket(
+                x, gate_out.expert_ids, plan.cum_u, my, slot_of,
+                num_slots=num_slots, cap_slot=cfg.cap_slot,
+            )
+            out = grouped_ffn(rb.xs, rb.valid, w1_all, w3_all, w2_all,
+                              use_kernel=cfg.use_kernel)
+            y = fused_replicated_combine(out, rb, gate_out.weights)
+            valid, slot_drops = rb.valid, rb.drops
+        else:
+            from repro.core.planner import token_targets as _tt
+
+            items_e = gate_out.expert_ids.reshape(-1)
+            owner = _tt(items_e, plan.u)  # (T*k,): u is the one-source split
+            mine = owner == my
+            recv_e = jnp.where(mine, items_e, -1)[None, :]      # (1, T*k)
+            recv_x = jnp.repeat(x, cfg.gating.top_k, axis=0)[None, :, :]
+            xs, valid, back_idx, slot_drops = bucket_by_slot(
+                recv_x, recv_e, slot_of, num_slots=num_slots,
+                cap_slot=cfg.cap_slot
+            )
+            out = grouped_ffn(xs, valid, w1_all, w3_all, w2_all,
+                              use_kernel=cfg.use_kernel)
+            ret = unbucket(out, valid, back_idx, (1, T * cfg.gating.top_k, D))
+            flat_w = gate_out.weights.reshape(-1)
+            items_t = jnp.repeat(jnp.arange(T, dtype=_I32), cfg.gating.top_k)
+            vals = ret[0] * flat_w[:, None].astype(ret.dtype)
+            y = jnp.zeros((T, D), ret.dtype).at[items_t].add(vals)
         if axis_name is not None:
             y = jax.lax.psum(y, axis_name)
         if cfg.n_shared_experts > 0:
@@ -229,28 +253,53 @@ def moe_layer_local(
         return y.astype(x.dtype), gate_out.aux_loss, stats
 
     # --- reroute + dispatch ------------------------------------------------
-    q_row = plan.q[my]                                     # (E, R)
-    disp = dispatch_tokens(x, gate_out.expert_ids, q_row, cap_pair=cfg.cap_pair)
-    if axis_name is not None:
-        recv_x = jax.lax.all_to_all(disp.send_x, axis_name, 0, 0, tiled=False)
-        recv_e = jax.lax.all_to_all(disp.send_e, axis_name, 0, 0, tiled=False)
+    if cfg.dispatch_impl == "fused":
+        # Single-sort permutation engine: one packed-key sort on the source,
+        # gather-built buffers, count metadata instead of an expert-id wire,
+        # and a sort-free receive side (repro.moe.permute).
+        disp = fused_dispatch(
+            x, gate_out.expert_ids, plan.cum_q[my], slot_of_all,
+            num_slots=num_slots, cap_pair=cfg.cap_pair,
+        )
+        if axis_name is not None:
+            recv_x = jax.lax.all_to_all(disp.send_x, axis_name, 0, 0,
+                                        tiled=False)
+            recv_c = jax.lax.all_to_all(disp.send_counts, axis_name, 0, 0,
+                                        tiled=False)
+        else:
+            recv_x, recv_c = disp.send_x, disp.send_counts
+        xs, valid, meta, slot_drops = fused_bucket(
+            recv_x, recv_c, num_slots=num_slots, cap_slot=cfg.cap_slot
+        )
+        out = grouped_ffn(xs, valid, w1_all, w3_all, w2_all,
+                          use_kernel=cfg.use_kernel)
+        ret = fused_unbucket(out, meta)
+        if axis_name is not None:
+            ret = jax.lax.all_to_all(ret, axis_name, 0, 0, tiled=False)
+        y = fused_combine(ret, disp, gate_out.weights)
     else:
-        recv_x, recv_e = disp.send_x, disp.send_e
+        q_row = plan.q[my]                                 # (E, R)
+        disp = dispatch_tokens(x, gate_out.expert_ids, q_row,
+                               cap_pair=cfg.cap_pair)
+        if axis_name is not None:
+            recv_x = jax.lax.all_to_all(disp.send_x, axis_name, 0, 0,
+                                        tiled=False)
+            recv_e = jax.lax.all_to_all(disp.send_e, axis_name, 0, 0,
+                                        tiled=False)
+        else:
+            recv_x, recv_e = disp.send_x, disp.send_e
 
-    slot_of = slot_of_all[my]                              # (E,)
-    xs, valid, back_idx, slot_drops = bucket_by_slot(
-        recv_x, recv_e, slot_of, num_slots=num_slots, cap_slot=cfg.cap_slot
-    )
-
-    # --- grouped expert FFN -------------------------------------------------
-    out = grouped_ffn(xs, valid, w1_all, w3_all, w2_all,
-                      use_kernel=cfg.use_kernel)
-
-    # --- inverse path + combine ---------------------------------------------
-    ret = unbucket(out, valid, back_idx, (R, cfg.cap_pair, D))
-    if axis_name is not None:
-        ret = jax.lax.all_to_all(ret, axis_name, 0, 0, tiled=False)
-    y = combine_tokens(ret, disp, gate_out.weights, T)
+        slot_of = slot_of_all[my]                          # (E,)
+        xs, valid, back_idx, slot_drops = bucket_by_slot(
+            recv_x, recv_e, slot_of, num_slots=num_slots,
+            cap_slot=cfg.cap_slot
+        )
+        out = grouped_ffn(xs, valid, w1_all, w3_all, w2_all,
+                          use_kernel=cfg.use_kernel)
+        ret = unbucket(out, valid, back_idx, (R, cfg.cap_pair, D))
+        if axis_name is not None:
+            ret = jax.lax.all_to_all(ret, axis_name, 0, 0, tiled=False)
+        y = combine_tokens(ret, disp, gate_out.weights, T)
 
     if cfg.n_shared_experts > 0:
         y = y + swiglu(x, params.shared_w1, params.shared_w3, params.shared_w2)
