@@ -8,14 +8,22 @@ on power-law loads, comparing four transports:
     fan-out (no relay, coarse per-expert messages).
   * ``no-relay``    -- UltraEP tile streaming without relay trees.
   * ``ultraep``     -- tile streaming + load-aware chunk-streaming relay.
+
+``sweep_tiered`` extends the figure to the multi-RSN deployment: for a range
+of intra/inter-rack bandwidth ratios it compares the flat load-aware relay
+against the rack-aware relay (one inter-rack copy per (expert, rack), leaves
+fanned out on the scale-up fabric) plus the rack-aware planner's per-tier
+token volumes -- the paper's Fig. 16-style trajectory on a two-level fabric.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
+from repro.core import planner as pl
 from repro.core import ref_planner as ref
 from repro.core.comm_plan import build_relay_schedule, simulate
+from repro.core.topology import Topology
 
 LINK_BW = 100e9          # per-rank scale-up link (model constant)
 EXPERT_BYTES = 44 << 20  # qwen3-235b expert bf16 (3 x 4096 x 1536 x 2B)
@@ -57,6 +65,68 @@ def one_case(alpha: float, R=64, E=128, n_slot=2, seed=0):
                 max_fanout=int((p.u > 0).sum(1).max()))
 
 
+def one_tiered_case(ratio: float, R=64, lanes=8, E=128, n_slot=2, seed=0,
+                    alpha=1.2):
+    """Flat vs rack-aware relay under an intra/inter bandwidth ratio."""
+    rng = np.random.default_rng(seed)
+    import jax.numpy as jnp
+
+    racks = R // lanes
+    topo = Topology(racks=racks, ranks_per_rack=lanes,
+                    intra_beta=LINK_BW, inter_beta=LINK_BW / ratio,
+                    intra_alpha=2e-6, inter_alpha=20e-6)
+    lam = (rng.pareto(alpha, size=(R, E)) * 40).astype(np.int64)
+    home = np.repeat(np.arange(R), E // R)
+
+    p_flat = pl.solve_plan(jnp.asarray(lam), jnp.asarray(home),
+                           n_slot=n_slot, u_min=8)
+    p_rack = pl.solve_plan(jnp.asarray(lam), jnp.asarray(home),
+                           n_slot=n_slot, u_min=8, rack_size=lanes)
+
+    def hosted_of(p):
+        h = np.array(p.u > 0)                  # (E, R)
+        h[np.arange(E), home] = True
+        return h
+
+    flat_sched = build_relay_schedule(hosted_of(p_flat), home, EXPERT_BYTES,
+                                      relay_threshold=3)
+    rack_sched = build_relay_schedule(hosted_of(p_rack), home, EXPERT_BYTES,
+                                      topology=topo)
+    t_flat, s_flat = simulate(flat_sched, num_ranks=R, link_bandwidth=LINK_BW,
+                              topology=topo, return_stats=True)
+    t_rack, s_rack = simulate(rack_sched, num_ranks=R, link_bandwidth=LINK_BW,
+                              topology=topo, return_stats=True)
+
+    tok_flat = np.array(pl.token_tier_volumes(p_flat.q, lanes))
+    tok_rack = np.array(p_rack.tier_tokens)
+    return dict(
+        bw_ratio=ratio,
+        flat_relay_ms=t_flat * 1e3,
+        rack_relay_ms=t_rack * 1e3,
+        relay_gain=t_flat / max(t_rack, 1e-12),
+        flat_inter_gb=s_flat.inter_bytes / 1e9,
+        rack_inter_gb=s_rack.inter_bytes / 1e9,
+        flat_last_inter_ms=s_flat.last_inter * 1e3,
+        rack_last_inter_ms=s_rack.last_inter * 1e3,
+        tok_inter_frac_flat=float(tok_flat[2] / max(tok_flat.sum(), 1)),
+        tok_inter_frac_rack=float(tok_rack[2] / max(tok_rack.sum(), 1)),
+    )
+
+
+def sweep_tiered(ratios=(1.0, 2.0, 4.0, 8.0), quiet=False, **kw):
+    rows = [one_tiered_case(r, **kw) for r in ratios]
+    if not quiet:
+        print("\n== Fig. 16b: tiered distribution latency (ms) ==")
+        print(f"{'bw ratio':>8s} {'flat':>9s} {'rack':>9s} {'gain':>6s} "
+              f"{'interGB f/r':>12s} {'tok-inter f/r':>14s}")
+        for r in rows:
+            print(f"{r['bw_ratio']:8.1f} {r['flat_relay_ms']:9.2f} "
+                  f"{r['rack_relay_ms']:9.2f} {r['relay_gain']:5.2f}x "
+                  f"{r['flat_inter_gb']:5.2f}/{r['rack_inter_gb']:<5.2f} "
+                  f"{r['tok_inter_frac_flat']:6.3f}/{r['tok_inter_frac_rack']:<6.3f}")
+    return rows
+
+
 def run(quiet=False):
     rows = [one_case(a) for a in (2.0, 1.5, 1.2, 1.05)]
     if not quiet:
@@ -73,3 +143,4 @@ def run(quiet=False):
 
 if __name__ == "__main__":
     run()
+    sweep_tiered()

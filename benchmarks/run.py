@@ -2,8 +2,9 @@
 
 Prints a ``name,value,unit`` CSV summary at the end for machine parsing and
 writes ``BENCH_breakdown.json`` (per-stage dispatch/bucket/combine ms plus
-the fused-vs-reference pipeline speedup) so the perf trajectory is recorded
-across PRs.
+the fused-vs-reference pipeline speedup) and ``BENCH_comm.json`` (Fig. 16
+relay latencies plus the tiered intra/inter-rack bandwidth sweep) so the
+perf trajectory is recorded across PRs.
 """
 
 from __future__ import annotations
@@ -41,6 +42,22 @@ def main() -> None:
                 f"{worst['p2p_serial_ms']/worst['ultraep_ms']:.1f}", "x"))
     csv.append(("comm.relay_gain",
                 f"{worst['no_relay_ms']/worst['ultraep_ms']:.2f}", "x"))
+
+    # -- Fig. 16b: tiered (multi-RSN) fabric sweep -----------------------
+    tiered = bench_comm.sweep_tiered()
+    worst_t = tiered[-1]
+    csv.append(("comm.tiered_relay_gain_bw8",
+                f"{worst_t['relay_gain']:.2f}", "x"))
+    csv.append(("comm.tok_inter_frac.flat",
+                f"{worst_t['tok_inter_frac_flat']:.3f}", "ratio"))
+    csv.append(("comm.tok_inter_frac.rack",
+                f"{worst_t['tok_inter_frac_rack']:.3f}", "ratio"))
+    comm_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             os.pardir, "BENCH_comm.json")
+    with open(os.path.abspath(comm_path), "w") as f:
+        json.dump({"fig16_flat": comm, "fig16b_tiered_sweep": tiered},
+                  f, indent=2, default=float)
+        f.write("\n")
 
     # -- Fig. 11: training throughput ------------------------------------
     frac = bench_training.analytic(steps=25)

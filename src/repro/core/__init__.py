@@ -6,24 +6,30 @@ from repro.core.planner import (
     Plan,
     cumulative_quota,
     occurrence_index,
+    replica_tier_volumes,
     slot_assignment,
     solve_plan,
     solve_replication,
     solve_reroute,
     token_targets,
+    token_tier_volumes,
 )
+from repro.core.topology import Topology
 
 __all__ = [
     "BalancerConfig",
     "ExpertLayout",
     "Plan",
+    "Topology",
     "cumulative_quota",
     "no_balance_plan",
     "occurrence_index",
+    "replica_tier_volumes",
     "slot_assignment",
     "solve",
     "solve_plan",
     "solve_replication",
     "solve_reroute",
     "token_targets",
+    "token_tier_volumes",
 ]

@@ -41,7 +41,7 @@ class BalancerConfig:
 
 
 def _finish_plan(lam: jax.Array, u: jax.Array, q: jax.Array, home: jax.Array,
-                 n_slot: int) -> Plan:
+                 n_slot: int, rack_size: int | None = None) -> Plan:
     R = lam.shape[0]
     x = planner.slot_assignment(u, home, n_slot)
     hosted = (u.T > 0) | jax.nn.one_hot(home, R, dtype=jnp.bool_).T
@@ -52,17 +52,22 @@ def _finish_plan(lam: jax.Array, u: jax.Array, q: jax.Array, home: jax.Array,
         tau=jnp.max(u.sum(axis=0)).astype(_I32), hosted=hosted,
         pre_max=jnp.max(ell), post_max=jnp.max(u.sum(axis=0)),
         cum_q=planner.cumulative_quota(q), cum_u=planner.cumulative_quota(u),
+        tier_tokens=(None if rack_size is None
+                     else planner.token_tier_volumes(q, rack_size)),
+        tier_replicas=(None if rack_size is None
+                       else planner.replica_tier_volumes(u, home, rack_size)),
     )
 
 
-def no_balance_plan(lam: jax.Array, home: jax.Array, n_slot: int) -> Plan:
+def no_balance_plan(lam: jax.Array, home: jax.Array, n_slot: int,
+                    rack_size: int | None = None) -> Plan:
     """Identity plan: every token goes to its expert's home rank."""
     lam = lam.astype(_I32)
     R, E = lam.shape
     u = (jax.nn.one_hot(home, R, dtype=_I32) * lam.sum(axis=0)[:, None]).astype(_I32)
     # q[r, e, t] = lam[r, e] iff t == home[e]
     q = lam[:, :, None] * jax.nn.one_hot(home, R, dtype=_I32)[None, :, :]
-    return _finish_plan(lam, u, q, home, n_slot)
+    return _finish_plan(lam, u, q, home, n_slot, rack_size)
 
 
 def solve(
@@ -71,18 +76,26 @@ def solve(
     cfg: BalancerConfig,
     *,
     lam_e_est: jax.Array | None = None,
+    rack_size: int | None = None,
 ) -> Plan:
     """Dispatch on ``cfg.mode``.  Jittable for all non-lplb modes.
 
     ``lam_e_est`` feeds the stale estimator for mode="eplb" (ignored
     elsewhere); passing None falls back to exact load (== eplb_plus).
+
+    ``rack_size`` (ranks per rack, static) switches on the rack-aware solve
+    tier: ultraep gains intra-rack-preferring placement; every mode that
+    decomposes quotas via :func:`planner.solve_reroute` gains the rack-local
+    matching tier; and all plans export per-tier transfer volumes.  The EPLB
+    baselines keep their own round-robin reroute (topology-aware EPLB is a
+    deferred follow-on, see ROADMAP) but still report tier volumes.
     """
     lam = lam.astype(_I32)
     home = home.astype(_I32)
     R, E = lam.shape
 
     if cfg.mode in ("none", "ideal"):
-        return no_balance_plan(lam, home, cfg.n_slot)
+        return no_balance_plan(lam, home, cfg.n_slot, rack_size)
 
     if cfg.mode == "ultraep":
         return planner.solve_plan(
@@ -93,6 +106,7 @@ def solve(
             locality=cfg.locality,
             max_replicas_per_expert=cfg.max_replicas_per_expert,
             probe_parallelism=cfg.probe_parallelism,
+            rack_size=rack_size,
         )
 
     if cfg.mode in ("eplb", "eplb_plus"):
@@ -105,7 +119,7 @@ def solve(
         )  # (E, R)
         q = round_robin_reroute_jax(lam, hosted)
         u = q.sum(axis=0).astype(_I32)
-        return _finish_plan(lam, u, q, home, cfg.n_slot)
+        return _finish_plan(lam, u, q, home, cfg.n_slot, rack_size)
 
     if cfg.mode == "lplb":
         import numpy as np
@@ -118,7 +132,8 @@ def solve(
         # LPLB's waterfill already fixed the instance loads u; decompose the
         # source-wise split with the same NW-corner rule the quota path uses.
         qj = planner.solve_reroute(lam, jnp.asarray(u, dtype=_I32),
-                                   locality=cfg.locality)
-        return _finish_plan(lam, jnp.asarray(u, dtype=_I32), qj, home, cfg.n_slot)
+                                   locality=cfg.locality, rack_size=rack_size)
+        return _finish_plan(lam, jnp.asarray(u, dtype=_I32), qj, home,
+                            cfg.n_slot, rack_size)
 
     raise ValueError(f"unknown balancer mode: {cfg.mode}")

@@ -28,7 +28,10 @@ import math
 
 import numpy as np
 
-__all__ = ["Edge", "RelaySchedule", "build_relay_schedule", "simulate"]
+from repro.core.topology import Topology
+
+__all__ = ["Edge", "RelaySchedule", "SimStats", "build_relay_schedule",
+           "simulate"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +63,7 @@ def build_relay_schedule(
     *,
     relay_threshold: int = 3,
     num_ranks: int | None = None,
+    topology: Topology | None = None,
 ) -> RelaySchedule:
     """Load-aware relay-tree construction (paper S6.2).
 
@@ -68,6 +72,15 @@ def build_relay_schedule(
       home: (E,) home rank per expert.
       expert_bytes: weight (or gradient) bytes of one expert.
       relay_threshold: fan-outs strictly above this get a two-stage relay.
+      topology: optional two-level fabric.  When given, the builder emits a
+        **rack-relay tree**: each remote rack hosting replicas receives
+        exactly ONE inter-rack copy (minimal scale-out volume), landed on
+        its least-loaded replica host; that rack-relay then fans out to its
+        rack-mates over the scale-up fabric, so leaf fan-out is intra-rack
+        *by construction*.  Inter-rack copies are themselves spread
+        load-aware across the home and already-fed rack-relays (a broadcast
+        tree over racks), so no single sender serialises the scale-out hop;
+        chunk pipelining in :func:`simulate` hides the added tree depth.
 
     Returns a :class:`RelaySchedule` with per-chunk dependencies encoded at
     edge granularity (chunk pipelining is applied by :func:`simulate`).
@@ -79,6 +92,80 @@ def build_relay_schedule(
 
     send_volume = np.zeros(R, dtype=np.int64)
     edges: list[Edge] = []
+
+    if topology is not None and topology.racks > 1:
+        if topology.ep_size != R:
+            raise ValueError(
+                f"topology {topology.racks}x{topology.ranks_per_rack} "
+                f"does not cover R={R} ranks")
+        # Channel-cost trackers in *seconds* (tier-aware): an inter-rack
+        # send occupies the channel beta_intra/beta_inter times longer than
+        # an intra-rack one, so pricing decisions in bytes would overload
+        # the scale-out senders.  ``send_volume`` stays bytes for reporting.
+        send_cost = np.zeros(R)
+        recv_cost = np.zeros(R)
+
+        def edge_secs(a: int, b: int) -> float:
+            al, beta = topology.link(a, b)
+            return al + expert_bytes / beta
+
+        def add_edge(f_rank: int, t: int, e: int, stage: int,
+                     dep: int) -> int:
+            idx = len(edges)
+            edges.append(Edge(int(f_rank), int(t), e, expert_bytes, stage,
+                              dep))
+            secs = edge_secs(f_rank, t)
+            send_cost[f_rank] += secs
+            recv_cost[t] += secs
+            send_volume[f_rank] += expert_bytes
+            return idx
+
+        # Hot experts first so their relays grab the least-loaded hosts.
+        fanouts = [(e, np.where(hosted[e])[0]) for e in range(E)]
+        fanouts = [(e, d[d != home[e]]) for e, d in fanouts]
+        fanouts.sort(key=lambda it: (-len(it[1]), it[0]))
+        for e, dsts in fanouts:
+            if len(dsts) == 0:
+                continue
+            src = int(home[e])
+            home_rack = topology.rack_of(src)
+            by_rack: dict[int, list[int]] = {}
+            for t in dsts.tolist():
+                by_rack.setdefault(topology.rack_of(t), []).append(t)
+
+            def grow_tree(members, feeders, stage0_root):
+                """Feed ``members`` one by one, each by the cheapest-channel
+                rank already holding the expert; receivers become feeders (a
+                load-aware broadcast tree; chunk pipelining amortises its
+                depth)."""
+                for t in sorted(members, key=lambda t: (send_cost[t], t)):
+                    f_rank, f_edge = min(
+                        feeders, key=lambda fr: (send_cost[fr[0]], fr[0]))
+                    idx = add_edge(f_rank, t, e,
+                                   0 if (stage0_root and f_edge < 0) else 1,
+                                   f_edge)
+                    feeders.append((int(t), idx))
+
+            # Home-rack replicas: a scale-up tree rooted at the home.
+            grow_tree(by_rack.pop(home_rack, []), [(src, -1)], True)
+            # Remote racks (largest first): exactly one inter-rack copy each
+            # (minimal scale-out volume), landed on the member with the
+            # least-loaded receive channel and fed by the cheapest holder
+            # anywhere (home or an already-fed rack relay); the rack then
+            # fans out intra-rack.
+            rack_feeders: list[tuple[int, int]] = [(src, -1)]
+            for g in sorted(by_rack, key=lambda g: (-len(by_rack[g]), g)):
+                members = by_rack[g]
+                relay = min(members, key=lambda t: (recv_cost[t],
+                                                    send_cost[t], t))
+                f_rank, f_edge = min(
+                    rack_feeders, key=lambda fr: (send_cost[fr[0]], fr[0]))
+                relay_idx = add_edge(f_rank, relay, e,
+                                     0 if f_edge < 0 else 1, f_edge)
+                rack_feeders.append((int(relay), relay_idx))
+                grow_tree([t for t in members if t != relay],
+                          [(int(relay), relay_idx)], False)
+        return RelaySchedule(edges=edges, send_volume=send_volume)
 
     # Pass 1: direct sends for small fan-outs seed the volume tracker.
     replica_sets: list[tuple[int, np.ndarray]] = []
@@ -125,6 +212,27 @@ def build_relay_schedule(
     return RelaySchedule(edges=edges, send_volume=send_volume)
 
 
+@dataclasses.dataclass(frozen=True)
+class SimStats:
+    """Per-edge completion statistics of one simulated schedule."""
+
+    edge_finish: np.ndarray       # (n_edges,) arrival time of each edge's
+                                  #   last chunk (seconds)
+    edge_is_inter: np.ndarray     # (n_edges,) bool, True = crossed racks
+    intra_bytes: int              # bytes moved on the scale-up fabric
+    inter_bytes: int              # bytes moved on the scale-out fabric
+
+    @property
+    def last_intra(self) -> float:
+        t = self.edge_finish[~self.edge_is_inter]
+        return float(t.max()) if t.size else 0.0
+
+    @property
+    def last_inter(self) -> float:
+        t = self.edge_finish[self.edge_is_inter]
+        return float(t.max()) if t.size else 0.0
+
+
 def simulate(
     schedule: RelaySchedule,
     *,
@@ -132,23 +240,41 @@ def simulate(
     link_bandwidth: float,
     alpha: float = 2e-6,
     chunk_bytes: int = 1 << 20,
-) -> float:
+    topology: Topology | None = None,
+    return_stats: bool = False,
+) -> float | tuple[float, SimStats]:
     """Event-driven chunk-level alpha-beta simulation of the schedule.
 
     Each rank has one send channel and one receive channel; a chunk occupies
     its channel for ``alpha + chunk/beta`` seconds.  A stage-two (leaf) chunk
     may start only after the *same chunk index* arrived at the relay (the
-    paper's per-chunk ready flag, Fig. 10).  Returns the makespan in seconds.
+    paper's per-chunk ready flag, Fig. 10).
+
+    With ``topology``, each edge uses its tier's link model (intra-rack edges
+    ``intra_alpha/intra_beta``, inter-rack edges ``inter_alpha/inter_beta``)
+    and the flat ``alpha``/``link_bandwidth`` arguments are ignored.
+
+    Returns the makespan in seconds; with ``return_stats=True``, returns
+    ``(makespan, SimStats)`` where the per-edge completion times feed the
+    tiered-bandwidth benchmark (Fig. 16-style trajectory).
     """
-    beta = link_bandwidth
     send_free = np.zeros(num_ranks)
     recv_free = np.zeros(num_ranks)
 
-    # Expand edges into chunks; keep per-(edge, chunk) arrival times.
+    def link(e: Edge) -> tuple[float, float]:
+        if topology is None:
+            return alpha, link_bandwidth
+        return topology.link(e.src, e.dst)
+
+    n_edges = len(schedule.edges)
     n_chunks = {
         i: max(1, -(-e.nbytes // chunk_bytes)) for i, e in enumerate(schedule.edges)
     }
-    arrival: dict[tuple[int, int], float] = {}
+    edge_finish = np.zeros(n_edges)
+    edge_is_inter = np.array(
+        [topology is not None and not topology.same_rack(e.src, e.dst)
+         for e in schedule.edges], dtype=bool,
+    ) if n_edges else np.zeros(0, dtype=bool)
 
     # Priority queue of (ready_time, order, edge_idx, chunk_idx).
     pq: list[tuple[float, int, int, int]] = []
@@ -168,15 +294,25 @@ def simulate(
     while pq:
         ready, _, i, c = heapq.heappop(pq)
         e = schedule.edges[i]
+        a, beta = link(e)
         this_bytes = min(chunk_bytes, e.nbytes - c * chunk_bytes)
         start = max(ready, send_free[e.src], recv_free[e.dst])
-        finish = start + alpha + this_bytes / beta
+        finish = start + a + this_bytes / beta
         send_free[e.src] = finish
         recv_free[e.dst] = finish
-        arrival[(i, c)] = finish
+        edge_finish[i] = max(edge_finish[i], finish)
         makespan = max(makespan, finish)
         # Wake dependent stage-two chunks of the same chunk index.
         for leaf_idx in pending_leaves.get(i, ()):  # leaf shares chunking
             heapq.heappush(pq, (finish, order, leaf_idx, c))
             order += 1
-    return makespan
+    if not return_stats:
+        return makespan
+    nbytes = np.array([e.nbytes for e in schedule.edges], dtype=np.int64)
+    stats = SimStats(
+        edge_finish=edge_finish,
+        edge_is_inter=edge_is_inter,
+        intra_bytes=int(nbytes[~edge_is_inter].sum()) if n_edges else 0,
+        inter_bytes=int(nbytes[edge_is_inter].sum()) if n_edges else 0,
+    )
+    return makespan, stats

@@ -36,7 +36,7 @@ import jax.numpy as jnp
 
 __all__ = ["Plan", "solve_replication", "solve_reroute", "solve_plan",
            "slot_assignment", "token_targets", "occurrence_index",
-           "cumulative_quota"]
+           "cumulative_quota", "token_tier_volumes", "replica_tier_volumes"]
 
 _I32 = jnp.int32
 
@@ -53,6 +53,10 @@ class Plan(NamedTuple):
     post_max: jax.Array   # () int32 post-balance max rank load
     cum_q: jax.Array      # (R, E, R) int32 inclusive cumsum of q over dst rank
     cum_u: jax.Array      # (E, R) int32 inclusive cumsum of u over instance rank
+    # Per-tier transfer accounting (populated when solved rack-aware,
+    # rack_size != None): token items and replica instances by fabric tier.
+    tier_tokens: jax.Array | None = None    # (3,) [local, intra_rack, inter_rack]
+    tier_replicas: jax.Array | None = None  # (2,) [intra_rack, inter_rack]
 
 
 def _expert_order(lam_e: jax.Array, home: jax.Array, R: int) -> jax.Array:
@@ -75,11 +79,22 @@ def _greedy_oracle(
     n_slot: int,
     u_min: int,
     max_replicas_per_expert: int,
+    rack_size: int | None = None,
 ) -> tuple[jax.Array, jax.Array]:
-    """One feasibility probe (Alg. 1 lines 6-19).  Returns (feasible, u)."""
+    """One feasibility probe (Alg. 1 lines 6-19).  Returns (feasible, u).
+
+    With ``rack_size`` (ranks per rack) set, slack ties between candidate
+    replica hosts break toward the expert's *home rack*: replica weights then
+    stream over the fat intra-rack fabric, and home-rack token demand stays
+    intra-rack after reroute.  Only exact slack ties are re-ordered (each
+    step transfers the same delta either way), so the probe's progress is
+    preserved; on a one-rack topology the bonus is uniform and the oracle is
+    bit-identical to the flat one.
+    """
     E = lam_e.shape[0]
     R = ell.shape[0]
     epr = E // R
+    rank_rack = jnp.arange(R, dtype=_I32) // (rack_size or R)  # (R,)
 
     exc0 = jnp.maximum(ell - tau, 0).astype(_I32)
     slk0 = jnp.maximum(tau - ell, 0).astype(_I32)
@@ -104,7 +119,13 @@ def _greedy_oracle(
             & (~hosted[e, :])
             & (nrep[e] < max_replicas_per_expert)
         )
-        t = jnp.argmax(jnp.where(adm, slk, -1)).astype(_I32)
+        # Primary score: slack.  Rack-aware mode adds a half-point bonus for
+        # the home rack so exact slack ties prefer intra-rack placement (the
+        # doubled slack keeps distinct slacks strictly ordered).
+        score = 2 * jnp.where(adm, slk, -1)
+        if rack_size is not None:
+            score = score + (rank_rack == rank_rack[home[e]]).astype(_I32)
+        t = jnp.argmax(score).astype(_I32)
         has_target = adm.any() & (cap > 0)
         delta = jnp.minimum(jnp.minimum(exc[r], slk[t]), cap)
         accept = (~rank_done) & (~experts_done) & has_target & (delta >= u_min)
@@ -151,6 +172,7 @@ def _greedy_oracle(
         "u_min",
         "max_replicas_per_expert",
         "probe_parallelism",
+        "rack_size",
     ),
 )
 def solve_replication(
@@ -161,6 +183,7 @@ def solve_replication(
     u_min: int = 1,
     max_replicas_per_expert: int | None = None,
     probe_parallelism: int = 1,
+    rack_size: int | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Solve the quota table U by threshold binary search (Alg. 1 lines 1-25).
 
@@ -173,6 +196,8 @@ def solve_replication(
       max_replicas_per_expert: optional global cap (LPLB uses 1); None = R.
       probe_parallelism: feasibility probes evaluated per round via vmap
         (TPU analogue of the paper's warp-parallel probing).
+      rack_size: ranks per rack of a two-level topology; slack ties in the
+        greedy oracle then prefer intra-rack replica placement.  None = flat.
 
     Returns:
       (u, tau): quota table (E, R) int32 and the solved threshold.
@@ -182,6 +207,8 @@ def solve_replication(
     R, E = lam.shape
     if E % R != 0:
         raise ValueError(f"E={E} must be a multiple of R={R}")
+    if rack_size is not None and R % rack_size != 0:
+        raise ValueError(f"rack_size={rack_size} must divide R={R}")
     max_rep = R if max_replicas_per_expert is None else max_replicas_per_expert
     P = probe_parallelism
 
@@ -203,6 +230,7 @@ def solve_replication(
         n_slot=n_slot,
         u_min=u_min,
         max_replicas_per_expert=max_rep,
+        rack_size=rack_size,
     )
 
     if P == 1:
@@ -248,30 +276,70 @@ def solve_replication(
     return best_u, hi
 
 
-def solve_reroute(lam: jax.Array, u: jax.Array, *, locality: bool = True) -> jax.Array:
+def _nw_corner(demand: jax.Array, quota: jax.Array) -> jax.Array:
+    """(..., N) marginals -> (..., N_src, N_dst) NW-corner transport plan."""
+    a = jnp.cumsum(demand, axis=-1)          # inclusive
+    b = jnp.cumsum(quota, axis=-1)
+    a0 = a - demand                          # exclusive
+    b0 = b - quota
+    return jnp.maximum(
+        0,
+        jnp.minimum(a[..., :, None], b[..., None, :])
+        - jnp.maximum(a0[..., :, None], b0[..., None, :]),
+    ).astype(_I32)
+
+
+def solve_reroute(
+    lam: jax.Array,
+    u: jax.Array,
+    *,
+    locality: bool = True,
+    rack_size: int | None = None,
+) -> jax.Array:
     """Quota decomposition Q (S5.2): locality first, then NW-corner residual.
 
     Vectorised over experts; both marginals are preserved exactly:
     ``Q.sum(-1) == lam`` and ``Q.sum(0).T == u``.
+
+    ``rack_size`` (ranks per rack) inserts a **rack-local** matching tier
+    between the rank-local step and the global residual: per expert and per
+    rack, residual demand is NW-corner matched against residual quota *inside
+    the rack* before any flow crosses racks.  For fixed marginals this
+    achieves the maximum possible intra-rack flow, ``sum_g min(demand_g,
+    quota_g)`` per expert -- so the rack-aware decomposition of a given quota
+    table never carries more inter-rack token volume than the flat NW-corner
+    decomposition of the same table.  With one rack the rack-local tier *is*
+    the global NW-corner and the result is bit-identical to the flat solve.
     """
     lam = lam.astype(_I32)
     u = u.astype(_I32)
     R, E = lam.shape
+    if rack_size is not None and R % rack_size != 0:
+        raise ValueError(f"rack_size={rack_size} must divide R={R}")
     demand = lam.T  # (E, R) per-expert source demand
     quota = u       # (E, R) per-expert host quota
+    local = None
     if locality:
         local = jnp.minimum(demand, quota)
         demand = demand - local
         quota = quota - local
-    a = jnp.cumsum(demand, axis=1)          # (E, R) inclusive
-    b = jnp.cumsum(quota, axis=1)
-    a0 = a - demand                          # exclusive
-    b0 = b - quota
-    fill = jnp.maximum(
-        0,
-        jnp.minimum(a[:, :, None], b[:, None, :])
-        - jnp.maximum(a0[:, :, None], b0[:, None, :]),
-    ).astype(_I32)                           # (E, R_src, R_dst)
+    q_intra = None
+    if rack_size is not None:
+        L = rack_size
+        G = R // L
+        # Rack-local tier: per-(expert, rack) NW-corner over the rack block.
+        fill_g = _nw_corner(demand.reshape(E, G, L),
+                            quota.reshape(E, G, L))          # (E, G, L, L)
+        demand = demand - fill_g.sum(axis=-1).reshape(E, R)
+        quota = quota - fill_g.sum(axis=-2).reshape(E, R)
+        # Scatter rack blocks onto the (R_src, R_dst) diagonal-of-racks.
+        eye_g = jnp.eye(G, dtype=_I32)
+        q_intra = (
+            eye_g[None, :, None, :, None] * fill_g[:, :, :, None, :]
+        ).reshape(E, R, R)
+    fill = _nw_corner(demand, quota)         # (E, R_src, R_dst)
+    if q_intra is not None:
+        fill = fill + q_intra
     q = jnp.transpose(fill, (1, 0, 2))       # (R_src, E, R_dst)
     if locality:
         eye = jnp.eye(R, dtype=_I32)
@@ -356,6 +424,42 @@ def token_targets(
     return tgt
 
 
+def token_tier_volumes(q: jax.Array, rack_size: int) -> jax.Array:
+    """(3,) int32 token items by fabric tier: [local, intra_rack, inter_rack].
+
+    ``q`` is the (R_src, E, R_dst) reroute split; multiply by the per-item
+    byte size (k * D * dtype bytes / k) for wire bytes.  Local items never
+    leave their rank, intra-rack items ride the scale-up fabric, inter-rack
+    items cross the thin scale-out fabric (the quantity rack-aware planning
+    minimises; cf. Pro-Prophet / LAER-MoE's inter-node volume objective).
+    """
+    R = q.shape[0]
+    per_pair = q.astype(_I32).sum(axis=1)                    # (R_src, R_dst)
+    ranks = jnp.arange(R, dtype=_I32)
+    same_rank = ranks[:, None] == ranks[None, :]
+    same_rack = (ranks[:, None] // rack_size) == (ranks[None, :] // rack_size)
+    local = jnp.sum(jnp.where(same_rank, per_pair, 0))
+    intra = jnp.sum(jnp.where(same_rack & ~same_rank, per_pair, 0))
+    inter = jnp.sum(jnp.where(~same_rack, per_pair, 0))
+    return jnp.stack([local, intra, inter]).astype(_I32)
+
+
+def replica_tier_volumes(u: jax.Array, home: jax.Array,
+                         rack_size: int) -> jax.Array:
+    """(2,) int32 replica instances by tier: [intra_rack, inter_rack].
+
+    Each off-home instance with positive quota costs one expert-weight
+    transfer from its home rank; multiply by expert bytes for wire volume.
+    """
+    E, R = u.shape
+    ranks = jnp.arange(R, dtype=_I32)
+    is_rep = (u.T > 0) & (home[None, :] != ranks[:, None])   # (R, E)
+    same_rack = (ranks[:, None] // rack_size) == (home[None, :] // rack_size)
+    intra = jnp.sum(is_rep & same_rack)
+    inter = jnp.sum(is_rep & ~same_rack)
+    return jnp.stack([intra, inter]).astype(_I32)
+
+
 def solve_plan(
     lam: jax.Array,
     home: jax.Array,
@@ -365,8 +469,14 @@ def solve_plan(
     locality: bool = True,
     max_replicas_per_expert: int | None = None,
     probe_parallelism: int = 1,
+    rack_size: int | None = None,
 ) -> Plan:
-    """Full Alg. 1: replication + reroute + slot map + imbalance metrics."""
+    """Full Alg. 1: replication + reroute + slot map + imbalance metrics.
+
+    ``rack_size`` (ranks per rack) switches on the rack-aware solve mode:
+    intra-rack-preferring replica placement, the rack-local reroute tier, and
+    per-tier transfer volume accounting exported on the plan.
+    """
     lam = lam.astype(_I32)
     home = home.astype(_I32)
     R, _E = lam.shape
@@ -377,8 +487,9 @@ def solve_plan(
         u_min=u_min,
         max_replicas_per_expert=max_replicas_per_expert,
         probe_parallelism=probe_parallelism,
+        rack_size=rack_size,
     )
-    q = solve_reroute(lam, u, locality=locality)
+    q = solve_reroute(lam, u, locality=locality, rack_size=rack_size)
     x = slot_assignment(u, home, n_slot)
     hosted = (u.T > 0) | (
         jax.nn.one_hot(home, R, dtype=jnp.bool_).T
@@ -395,4 +506,8 @@ def solve_plan(
         post_max=jnp.max(u.sum(axis=0)),
         cum_q=cumulative_quota(q),
         cum_u=cumulative_quota(u),
+        tier_tokens=(None if rack_size is None
+                     else token_tier_volumes(q, rack_size)),
+        tier_replicas=(None if rack_size is None
+                       else replica_tier_volumes(u, home, rack_size)),
     )

@@ -55,7 +55,8 @@ def _period(cfg):
 
 
 def _lower_compile(cell, mesh):
-    jax.set_mesh(mesh)
+    if hasattr(jax, "set_mesh"):      # newer jax; explicit meshes work without
+        jax.set_mesh(mesh)
     t0 = time.time()
     jitted = jax.jit(cell.step_fn, in_shardings=cell.in_shardings,
                      donate_argnums=cell.donate)

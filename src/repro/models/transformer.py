@@ -41,7 +41,24 @@ from repro.moe.layer import (
 
 __all__ = ["RuntimeConfig", "ParallelCtx", "BlockParams", "Segment",
            "build_segments", "segments_for", "segment_apply", "attn_config",
-           "ssm_config", "moe_config", "init_block", "init_cache_block"]
+           "ssm_config", "moe_config", "init_block", "init_cache_block",
+           "shard_map_compat"]
+
+
+def shard_map_compat(f, *, mesh, in_specs, out_specs):
+    """shard_map across jax versions (check_vma vs legacy check_rep).
+
+    TypeError covers the promotion window where ``jax.shard_map`` exists
+    but still takes ``check_rep``.
+    """
+    try:
+        from jax import shard_map
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+    except (ImportError, TypeError):
+        from jax.experimental.shard_map import shard_map
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,17 +83,37 @@ class RuntimeConfig:
 
 @dataclasses.dataclass(frozen=True)
 class ParallelCtx:
-    """Mesh context for the shard_map MoE islands; None mesh = single device."""
+    """Mesh context for the shard_map MoE islands; None mesh = single device.
+
+    ``rack_axis`` factors the EP group into a two-level (rack x lane)
+    topology: the model axis becomes the intra-rack lane dimension and EP
+    collectives become tiered (DESIGN.md S9).  Global EP rank order is
+    rack-major, so flat and factored meshes agree on rank numbering.
+    """
 
     mesh: Any = None                     # jax.sharding.Mesh
     batch_axes: tuple[str, ...] = ("data",)
     model_axis: str = "model"
+    rack_axis: str | None = None         # scale-out EP axis (None = flat EP)
+
+    @property
+    def ep_axes(self) -> str | tuple[str, str]:
+        """Mesh axes of the EP group: (rack, lane) when factored."""
+        if self.rack_axis is not None:
+            return (self.rack_axis, self.model_axis)
+        return self.model_axis
+
+    @property
+    def racks(self) -> int:
+        if self.mesh is None or self.rack_axis is None:
+            return 1
+        return int(self.mesh.shape[self.rack_axis])
 
     @property
     def ep_size(self) -> int:
         if self.mesh is None:
             return 1
-        return self.mesh.shape[self.model_axis]
+        return self.racks * int(self.mesh.shape[self.model_axis])
 
     @property
     def batch_size_divisor(self) -> int:
@@ -100,7 +137,7 @@ def wsc(x: jax.Array, pctx: ParallelCtx, layout: str, *,
     from jax.sharding import NamedSharding
     from jax.sharding import PartitionSpec as P
 
-    b, m = pctx.batch_axes, pctx.model_axis
+    b, m = pctx.batch_axes, pctx.ep_axes
     if x.shape[0] % pctx.batch_size_divisor != 0:
         b = None                      # tiny batch (long_500k): replicate B
     seq = None if (decode or layout == "full") else m
@@ -167,12 +204,15 @@ def moe_config(cfg: ModelConfig, rcfg: RuntimeConfig, pctx: ParallelCtx,
         tokens_per_rank, m.top_k, ep, slots_per_rank,
         cf_pair=rcfg.cf_pair, cf_slot=rcfg.cf_slot,
     )
+    if pctx.rack_axis is not None and dispatch_mode == "a2a":
+        dispatch_mode = "hier_a2a"   # factored mesh: tiered token exchange
     return MoEConfig(
         gating=gating, balancer=bal, d_model=cfg.d_model, d_ff=m.d_ff,
         ep_size=ep, cap_pair=cap_pair, cap_slot=cap_slot,
         n_shared_experts=m.n_shared_experts, shared_d_ff=m.shared_d_ff,
         distribute_chunks=rcfg.distribute_chunks, use_kernel=rcfg.use_kernel,
         dispatch_mode=dispatch_mode, dispatch_impl=rcfg.dispatch_impl,
+        racks=pctx.racks,
     )
 
 
@@ -261,10 +301,15 @@ def init_block(key: jax.Array, cfg: ModelConfig, kind: str,
         )
     elif ffn_kind == "moe":
         # Parameters are GLOBAL (all E experts); the shard_map in_specs
-        # split the expert dim over the EP axis at execution time.
+        # split the expert dim over the EP axis at execution time.  The
+        # single-group init view must also collapse the rack factoring
+        # (racks must divide ep_size).
         mcfg = moe_config(cfg, rcfg, pctx, tokens_per_rank=8)  # caps unused
-        moe = init_moe_params(ks[1], dataclasses.replace(mcfg, ep_size=1),
-                              dtype)
+        moe = init_moe_params(
+            ks[1],
+            dataclasses.replace(mcfg, ep_size=1, racks=1,
+                                dispatch_mode="a2a"),
+            dtype)
     norm2 = None if ffn_kind == "none" else jnp.ones((D,), dtype)
     return BlockParams(norm1=jnp.ones((D,), dtype), norm2=norm2,
                        attn=attn, ssm=ssm, ffn=ffn, moe=moe)
@@ -313,17 +358,17 @@ def _ep_moe_block(x: jax.Array, mp: MoEParams, mcfg: MoEConfig,
         return (y.reshape(B, S, D), aux,
                 stats.drops_dispatch + stats.drops_slot, stats.counts)
 
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
 
-    ba, ma = pctx.batch_axes, pctx.model_axis
+    ba, ma = pctx.batch_axes, pctx.ep_axes
+    ep_flat = ma if isinstance(ma, tuple) else (ma,)
     if B % pctx.batch_size_divisor != 0:
         ba = ()                       # tiny batch: replicate over DP axes
     replicated = mcfg.dispatch_mode == "replicated"
     seq_ok = (not replicated) and S % pctx.ep_size == 0
     x_spec = P(ba, ma, None) if seq_ok else P(ba, None, None)
 
-    all_axes = (*ba, ma)
+    all_axes = (*ba, *ep_flat)
 
     def local(x, router, w1, w3, w2, sw1, sw3, sw2, bias):
         Bl, Sl, _ = x.shape
@@ -342,13 +387,12 @@ def _ep_moe_block(x: jax.Array, mp: MoEParams, mcfg: MoEConfig,
     has_shared = mp.shared_w1 is not None
     sw_spec = P(None, None) if has_shared else P()
     bias_spec = P(None) if router_bias is not None else P()
-    fn = shard_map(
+    fn = shard_map_compat(
         local, mesh=pctx.mesh,
         in_specs=(x_spec, P(None, None), P(ma, None, None),
                   P(ma, None, None), P(ma, None, None), sw_spec, sw_spec,
                   sw_spec, bias_spec),
         out_specs=(x_spec, P(all_axes), P(all_axes), P(None)),
-        check_vma=False,
     )
     y, aux, drops, counts = fn(x, mp.router, mp.w1, mp.w3, mp.w2,
                                mp.shared_w1, mp.shared_w3, mp.shared_w2,

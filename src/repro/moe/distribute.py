@@ -67,23 +67,59 @@ def select_local_replicas(w_local: jax.Array, x_slots_flat: jax.Array,
                      jnp.zeros((), w_local.dtype))
 
 
+def _scatter_replicas(partial: jax.Array, axis_name, racks: int) -> jax.Array:
+    """Reduce-scatter one (R, N_slot, D, Fc) partial onto this rank's slots.
+
+    Flat EP axis (``axis_name`` a string): a single ``psum_scatter``.
+
+    Factored ``(rack_axis, lane_axis)`` EP (``axis_name`` a 2-tuple): the
+    paper's tiered replica streaming (S6.1) expressed as two collectives --
+
+      stage 1 (scale-up): ``psum_scatter`` over the lane axis aggregates, per
+        destination rack, the whole rack's contributions onto the same-lane
+        member, so each home's weights leave the rack at most once per
+        destination rack;
+      stage 2 (scale-out): ``psum_scatter`` over the rack axis lands each
+        rack-aggregate on its final rank.  Slots bound intra-rack contribute
+        zero blocks here, so the thin fabric only carries cross-rack
+        replicas' payloads in substance.
+
+    Every slot has exactly one nonzero (home) contribution, so both shapes
+    produce bit-identical replica weights.
+    """
+    R, n_slot, D, Fc = partial.shape
+    if isinstance(axis_name, (tuple, list)):
+        rack_axis, lane_axis = axis_name
+        t = partial.reshape(racks, R // racks, n_slot, D, Fc)
+        t = jax.lax.psum_scatter(t, lane_axis, scatter_dimension=1,
+                                 tiled=False)          # (G, n_slot, D, Fc)
+        return jax.lax.psum_scatter(t, rack_axis, scatter_dimension=0,
+                                    tiled=False)       # (n_slot, D, Fc)
+    return jax.lax.psum_scatter(partial, axis_name, scatter_dimension=0,
+                                tiled=False)
+
+
 def materialize_replicas(
     w_local: jax.Array,
     x_slots: jax.Array,
     my_rank: jax.Array,
-    axis_name: str | None,
+    axis_name: str | tuple[str, str] | None,
     *,
     n_chunks: int = 1,
+    racks: int = 1,
 ) -> jax.Array:
     """Gather this rank's replica weights from their home ranks.
 
     Args:
       w_local: (E_local, D, F) this rank's main expert weights.
       x_slots: (R, N_slot) the plan's slot table (identical on all ranks).
-      my_rank: scalar EP rank index of the caller.
-      axis_name: shard_map axis of the EP group; None = single-rank mode
-        (R == 1), where replicas are just local gathers.
+      my_rank: scalar EP rank index of the caller (rack-major when factored).
+      axis_name: shard_map axis of the EP group -- a single axis name, a
+        ``(rack_axis, lane_axis)`` tuple for two-stage tiered streaming over
+        a factored mesh, or None = single-rank mode (R == 1), where replicas
+        are just local gathers.
       n_chunks: tile-streaming knob -- chunks of the last (F) dimension.
+      racks: rack count of the factored EP group (ignored for flat axes).
 
     Returns:
       (N_slot, D, F) replica weights for this rank's redundant slots; zero
@@ -102,11 +138,8 @@ def materialize_replicas(
 
     if n_chunks <= 1:
         partial = select_local_replicas(w_local, flat, base)
-        rep = jax.lax.psum_scatter(
-            partial.reshape(R, n_slot, D, F), axis_name, scatter_dimension=0,
-            tiled=False,
-        )
-        return rep
+        return _scatter_replicas(partial.reshape(R, n_slot, D, F), axis_name,
+                                 racks)
     # Tile streaming: chunk the F dimension so the transient send buffer is
     # (R*n_slot, D, F/n_chunks) and chunks pipeline under the XLA scheduler.
     chunk = -(-F // n_chunks)
@@ -116,9 +149,8 @@ def materialize_replicas(
         w_c = jax.lax.dynamic_slice_in_dim(w_local, lo, min(chunk, F - lo), 2)
         partial = select_local_replicas(w_c, flat, base)
         outs.append(
-            jax.lax.psum_scatter(
-                partial.reshape(R, n_slot, D, w_c.shape[-1]), axis_name,
-                scatter_dimension=0, tiled=False,
+            _scatter_replicas(
+                partial.reshape(R, n_slot, D, w_c.shape[-1]), axis_name, racks
             )
         )
     return jnp.concatenate(outs, axis=-1)

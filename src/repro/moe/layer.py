@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.core import balancer as balancer_mod
 from repro.core.balancer import BalancerConfig
 from repro.core.layout import ExpertLayout, physical_slot_of
+from repro.core.planner import token_targets
 from repro.moe.dispatch import (
     bucket_by_slot,
     combine_tokens,
@@ -38,6 +39,7 @@ from repro.moe.permute import (
     fused_replicated_bucket,
     fused_replicated_combine,
     fused_unbucket,
+    two_hop_all_to_all,
 )
 from repro.moe.expert import grouped_ffn
 from repro.moe.gating import GateOut, GatingConfig, gate
@@ -62,14 +64,42 @@ class MoEConfig:
     shared_d_ff: int = 0
     distribute_chunks: int = 1     # tile-streaming chunk knob
     use_kernel: bool = False       # Pallas grouped-GEMM for expert FFN
-    dispatch_mode: str = "a2a"     # "a2a" (EP all-to-all) | "replicated"
+    dispatch_mode: str = "a2a"     # "a2a" | "replicated" | "hier_a2a"
     # "replicated": tokens are replicated across the EP axis (decode path /
     # exact reference); each rank computes the quota-assigned share of items
     # for its hosted slots and the outputs are psum-combined.  No token
     # all_to_all, no pair capacities, no drops at pair granularity.
+    # "hier_a2a": two-level (rack x lane) EP -- the rack-aware plan solve,
+    # the two-hop token exchange and the tiered replica streaming of
+    # DESIGN.md S9.  Requires the fused engine and a factored
+    # (rack_axis, lane_axis) mesh; bit-identical to "a2a" on one rack.
     dispatch_impl: str = "fused"   # "fused" (single-sort permutation engine,
     # repro.moe.permute) | "reference" (multi-sort scatter path,
     # repro.moe.dispatch -- kept as the equivalence oracle)
+    racks: int = 1                 # racks of the two-level EP group
+
+    def __post_init__(self):
+        # Fail at construction, not at trace time (DESIGN.md S9).
+        if self.dispatch_impl not in ("fused", "reference"):
+            raise ValueError(f"unknown dispatch_impl: {self.dispatch_impl!r}")
+        if self.dispatch_mode not in ("a2a", "replicated", "hier_a2a"):
+            raise ValueError(f"unknown dispatch_mode: {self.dispatch_mode!r}")
+        if self.dispatch_mode == "hier_a2a" and self.dispatch_impl != "fused":
+            raise ValueError(
+                "dispatch_mode='hier_a2a' requires dispatch_impl='fused' "
+                "(the reference scatter path is the flat-EP oracle)")
+        if self.racks < 1 or self.ep_size % self.racks != 0:
+            raise ValueError(
+                f"racks={self.racks} must divide ep_size={self.ep_size}")
+
+    @property
+    def ranks_per_rack(self) -> int:
+        return self.ep_size // self.racks
+
+    @property
+    def rack_size(self) -> int | None:
+        """Ranks per rack when the topology is two-level, else None (flat)."""
+        return self.ranks_per_rack if self.racks > 1 else None
 
     @property
     def layout(self) -> ExpertLayout:
@@ -94,6 +124,8 @@ class MoEStats(NamedTuple):
     post_max: jax.Array         # () post-balance max rank load
     max_slot_load: jax.Array    # () busiest physical slot occupancy
     counts: jax.Array           # (E,) local per-expert load
+    tier_tokens: jax.Array | None = None    # (3,) [local, intra, inter]
+    tier_replicas: jax.Array | None = None  # (2,) [intra, inter] (rack-aware)
 
 
 def default_capacities(tokens_per_rank: int, top_k: int, ep_size: int,
@@ -144,7 +176,7 @@ def moe_layer_local(
     params: MoEParams,
     cfg: MoEConfig,
     *,
-    axis_name: str | None,
+    axis_name: str | tuple[str, str] | None,
     router_bias: jax.Array | None = None,
     lam_e_est: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array, MoEStats]:
@@ -153,21 +185,57 @@ def moe_layer_local(
     Args:
       x: (T_local, D) this rank's tokens.
       params: per-rank parameter shard.
-      axis_name: EP mesh axis; None = single-rank (R must be 1).
+      axis_name: EP mesh axis; a ``(rack_axis, lane_axis)`` tuple for a
+        factored two-level mesh (required by ``dispatch_mode="hier_a2a"``
+        with ep_size > 1, supported by "replicated"); None = single-rank
+        (R must be 1).
       router_bias: optional (E,) aux-free routing bias.
       lam_e_est: optional stale per-expert load estimate (EPLB mode).
 
     Returns:
       (y, aux_loss, stats) with y: (T_local, D).
     """
-    if cfg.dispatch_impl not in ("fused", "reference"):
-        raise ValueError(f"unknown dispatch_impl: {cfg.dispatch_impl!r}")
     T, D = x.shape
     layout = cfg.layout
     R = cfg.ep_size
     epr = layout.experts_per_rank
     n_slot = layout.n_slot
     num_slots = epr + n_slot
+    lanes = cfg.ranks_per_rack
+
+    factored = isinstance(axis_name, (tuple, list))
+    if factored:
+        if len(axis_name) != 2:
+            raise ValueError(
+                f"factored axis_name must be (rack_axis, lane_axis), "
+                f"got {axis_name!r}")
+        if cfg.dispatch_mode == "a2a":
+            raise ValueError(
+                "dispatch_mode='a2a' runs on a flat EP axis; use "
+                "'hier_a2a' on a factored (rack, lane) mesh")
+        rack_axis, lane_axis = axis_name
+    elif cfg.dispatch_mode == "hier_a2a" and axis_name is not None:
+        raise ValueError(
+            "dispatch_mode='hier_a2a' needs a (rack_axis, lane_axis) "
+            "axis_name tuple (or None when ep_size == 1)")
+
+    def my_rank() -> jax.Array:
+        if factored:
+            return (jax.lax.axis_index(rack_axis) * lanes
+                    + jax.lax.axis_index(lane_axis)).astype(_I32)
+        if axis_name is not None:
+            return jax.lax.axis_index(axis_name).astype(_I32)
+        return jnp.asarray(0, _I32)
+
+    def exchange(buf: jax.Array, *, reverse: bool = False) -> jax.Array:
+        """(R, ...) destination-major buffer through the EP fabric."""
+        if factored:
+            return two_hop_all_to_all(buf, racks=cfg.racks,
+                                      rack_axis=rack_axis,
+                                      lane_axis=lane_axis, reverse=reverse)
+        if axis_name is not None:
+            return jax.lax.all_to_all(buf, axis_name, 0, 0, tiled=False)
+        return buf
 
     gate_out: GateOut = gate(x, params.router, cfg.gating, bias=router_bias)
 
@@ -179,25 +247,31 @@ def moe_layer_local(
         # experts' home ranks (source locality is vacuous here).
         lam = (jax.nn.one_hot(home, R, dtype=_I32)
                * gate_out.counts[:, None]).T                        # (R, E)
-        my = (jax.lax.axis_index(axis_name).astype(_I32)
-              if axis_name is not None else jnp.asarray(0, _I32))
+        my = my_rank()
     elif axis_name is not None:
-        lam = jax.lax.all_gather(gate_out.counts, axis_name)       # (R, E)
-        my = jax.lax.axis_index(axis_name).astype(_I32)
+        if factored:
+            # Two-step gather mirrors the wire: lanes first, then racks,
+            # yielding rack-major (= global rank order) load rows.
+            lam = jax.lax.all_gather(gate_out.counts, lane_axis)   # (L, E)
+            lam = jax.lax.all_gather(lam, rack_axis).reshape(R, -1)
+        else:
+            lam = jax.lax.all_gather(gate_out.counts, axis_name)   # (R, E)
+        my = my_rank()
     else:
         if R != 1:
             raise ValueError("axis_name=None requires ep_size == 1")
         lam = gate_out.counts[None]
         my = jnp.asarray(0, _I32)
-    plan = balancer_mod.solve(lam, home, cfg.balancer, lam_e_est=lam_e_est)
+    plan = balancer_mod.solve(lam, home, cfg.balancer, lam_e_est=lam_e_est,
+                              rack_size=cfg.rack_size)
 
     # --- replica weight distribution (overlappable with reroute) ----------
     w1r = materialize_replicas(params.w1, plan.x, my, axis_name,
-                               n_chunks=cfg.distribute_chunks)
+                               n_chunks=cfg.distribute_chunks, racks=cfg.racks)
     w3r = materialize_replicas(params.w3, plan.x, my, axis_name,
-                               n_chunks=cfg.distribute_chunks)
+                               n_chunks=cfg.distribute_chunks, racks=cfg.racks)
     w2r = materialize_replicas(params.w2, plan.x, my, axis_name,
-                               n_chunks=cfg.distribute_chunks)
+                               n_chunks=cfg.distribute_chunks, racks=cfg.racks)
     w1_all = jnp.concatenate([params.w1, w1r], axis=0)   # (num_slots, D, F)
     w3_all = jnp.concatenate([params.w3, w3r], axis=0)
     w2_all = jnp.concatenate([params.w2, w2r], axis=0)
@@ -219,10 +293,9 @@ def moe_layer_local(
             y = fused_replicated_combine(out, rb, gate_out.weights)
             valid, slot_drops = rb.valid, rb.drops
         else:
-            from repro.core.planner import token_targets as _tt
-
             items_e = gate_out.expert_ids.reshape(-1)
-            owner = _tt(items_e, plan.u)  # (T*k,): u is the one-source split
+            # (T*k,): u is the one-source split.
+            owner = token_targets(items_e, plan.u)
             mine = owner == my
             recv_e = jnp.where(mine, items_e, -1)[None, :]      # (1, T*k)
             recv_x = jnp.repeat(x, cfg.gating.top_k, axis=0)[None, :, :]
@@ -237,7 +310,9 @@ def moe_layer_local(
             items_t = jnp.repeat(jnp.arange(T, dtype=_I32), cfg.gating.top_k)
             vals = ret[0] * flat_w[:, None].astype(ret.dtype)
             y = jnp.zeros((T, D), ret.dtype).at[items_t].add(vals)
-        if axis_name is not None:
+        if factored:
+            y = jax.lax.psum(jax.lax.psum(y, lane_axis), rack_axis)
+        elif axis_name is not None:
             y = jax.lax.psum(y, axis_name)
         if cfg.n_shared_experts > 0:
             y = y + swiglu(x, params.shared_w1, params.shared_w3,
@@ -249,6 +324,8 @@ def moe_layer_local(
             post_max=plan.post_max,
             max_slot_load=valid.sum(axis=1).max().astype(_I32),
             counts=gate_out.counts,
+            tier_tokens=plan.tier_tokens,
+            tier_replicas=plan.tier_replicas,
         )
         return y.astype(x.dtype), gate_out.aux_loss, stats
 
@@ -256,26 +333,22 @@ def moe_layer_local(
     if cfg.dispatch_impl == "fused":
         # Single-sort permutation engine: one packed-key sort on the source,
         # gather-built buffers, count metadata instead of an expert-id wire,
-        # and a sort-free receive side (repro.moe.permute).
+        # and a sort-free receive side (repro.moe.permute).  On a factored
+        # mesh the same destination-major buffers ride the two-hop tiered
+        # exchange (inter-rack rack-aggregates, then intra-rack scatter);
+        # the count metadata rides both hops unchanged.
         disp = fused_dispatch(
             x, gate_out.expert_ids, plan.cum_q[my], slot_of_all,
             num_slots=num_slots, cap_pair=cfg.cap_pair,
         )
-        if axis_name is not None:
-            recv_x = jax.lax.all_to_all(disp.send_x, axis_name, 0, 0,
-                                        tiled=False)
-            recv_c = jax.lax.all_to_all(disp.send_counts, axis_name, 0, 0,
-                                        tiled=False)
-        else:
-            recv_x, recv_c = disp.send_x, disp.send_counts
+        recv_x = exchange(disp.send_x)
+        recv_c = exchange(disp.send_counts)
         xs, valid, meta, slot_drops = fused_bucket(
             recv_x, recv_c, num_slots=num_slots, cap_slot=cfg.cap_slot
         )
         out = grouped_ffn(xs, valid, w1_all, w3_all, w2_all,
                           use_kernel=cfg.use_kernel)
-        ret = fused_unbucket(out, meta)
-        if axis_name is not None:
-            ret = jax.lax.all_to_all(ret, axis_name, 0, 0, tiled=False)
+        ret = exchange(fused_unbucket(out, meta), reverse=True)
         y = fused_combine(ret, disp, gate_out.weights)
     else:
         q_row = plan.q[my]                                 # (E, R)
@@ -311,5 +384,7 @@ def moe_layer_local(
         post_max=plan.post_max,
         max_slot_load=valid.sum(axis=1).max().astype(_I32),
         counts=gate_out.counts,
+        tier_tokens=plan.tier_tokens,
+        tier_replicas=plan.tier_replicas,
     )
     return y.astype(x.dtype), gate_out.aux_loss, stats

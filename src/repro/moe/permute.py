@@ -32,6 +32,12 @@ parks them past the last slot.  At zero-drop capacities the fused and
 reference paths produce bit-identical layer outputs: every item's buffer row
 holds the same activation, the grouped FFN is row-independent, and the
 combine reduces the k contributions of each token in the same order.
+
+On a two-level (rack x lane) topology the SAME single sort serves the
+hierarchical wire: destination ranks are rack-major, so the packed key
+``dst * (S+1) + slot`` is already the ``(rack, lane, slot)`` key, and
+:func:`two_hop_all_to_all` replays the flat exchange as an inter-rack hop of
+rack-aggregated payloads followed by an intra-rack scatter (DESIGN.md S9).
 """
 
 from __future__ import annotations
@@ -54,6 +60,7 @@ __all__ = [
     "fused_combine",
     "fused_replicated_bucket",
     "fused_replicated_combine",
+    "two_hop_all_to_all",
 ]
 
 _I32 = jnp.int32
@@ -88,6 +95,46 @@ class ReplicatedBucket(NamedTuple):
     item_pos: jax.Array   # (N,) row within that slot buffer
     item_ok: jax.Array    # (N,) bool: mine, hosted and within capacity
     drops: jax.Array      # () int32 of *my* items dropped (unhosted/overflow)
+
+
+def two_hop_all_to_all(
+    buf: jax.Array,
+    *,
+    racks: int,
+    rack_axis: str,
+    lane_axis: str,
+    reverse: bool = False,
+) -> jax.Array:
+    """Tiered EP exchange of a destination-major buffer (DESIGN.md S9).
+
+    ``buf`` is ``(R, ...)`` with one leading row per destination EP rank in
+    rack-major order -- exactly the layout :func:`fused_dispatch` emits,
+    because its packed sort key ``dst * (S+1) + slot`` *is* the hierarchical
+    ``(rack, lane, slot)`` key when ``dst = rack * L + lane``.  The wire is
+    two hops over the factored ``(rack_axis, lane_axis)`` mesh:
+
+      hop 1 (scale-out): ``all_to_all`` over ``rack_axis`` moves, per remote
+        rack, ONE rack-aggregated payload of ``L`` destination-lane rows to
+        the *same-lane* peer in that rack (rail-aligned, so the thin fabric
+        sees ``G`` messages of ``L*cap`` rows instead of ``R`` of ``cap``);
+      hop 2 (scale-up): ``all_to_all`` over ``lane_axis`` scatters each row
+        to its final lane inside the rack.
+
+    Both hops are involutions and commute per-element, so the composite is a
+    pure relabelling: the result rows are ``recv[src] = send_{src}[me]`` --
+    bit-identical to a flat ``all_to_all`` over the combined axis.  The
+    count-matrix metadata rides the same path (any trailing shape works).
+    ``reverse=True`` applies the inverse permutation (lane hop first) for the
+    return wire.
+    """
+    R = buf.shape[0]
+    if R % racks != 0:
+        raise ValueError(f"R={R} must factor into racks={racks}")
+    t = buf.reshape((racks, R // racks) + buf.shape[1:])
+    hops = [(rack_axis, 0), (lane_axis, 1)]
+    for axis, dim in hops[::-1] if reverse else hops:
+        t = jax.lax.all_to_all(t, axis, dim, dim, tiled=True)
+    return t.reshape((R,) + buf.shape[1:])
 
 
 def occurrence_by_histogram(ids: jax.Array, num_groups: int) -> jax.Array:

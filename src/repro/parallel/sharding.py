@@ -24,6 +24,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core.topology import Topology
 from repro.models.attention import GQAParams, KVCache, MLAParams
 from repro.models.model import LMParams
 from repro.models.ssm import SSMParams, SSMState
@@ -36,16 +37,37 @@ from repro.models.transformer import (
 )
 from repro.moe.layer import MoEParams
 
-__all__ = ["MeshAxes", "lm_param_specs", "batch_specs", "cache_specs",
-           "opt_state_specs", "activation_spec", "from_ctx"]
+__all__ = ["MeshAxes", "Topology", "lm_param_specs", "batch_specs",
+           "cache_specs", "opt_state_specs", "activation_spec", "from_ctx",
+           "topology_from_ctx"]
+
+
+def topology_from_ctx(pctx: ParallelCtx, **link_kw) -> Topology:
+    """Derive the EP :class:`Topology` of a mesh context.
+
+    A flat mesh is a single rack of ``ep_size`` ranks; a factored mesh
+    (``pctx.rack_axis`` set) is ``racks x lanes``.  ``link_kw`` overrides the
+    per-tier alpha/beta link model for the comm planner / benchmarks.
+    """
+    if pctx.rack_axis is None:
+        return Topology.flat(pctx.ep_size, **link_kw)
+    return Topology(racks=pctx.racks,
+                    ranks_per_rack=pctx.ep_size // pctx.racks, **link_kw)
 
 
 @dataclasses.dataclass(frozen=True)
 class MeshAxes:
-    """Axis names + sizes of the active mesh."""
+    """Axis names + sizes of the active mesh.
+
+    ``model`` is a single axis name on a flat mesh, or the factored
+    ``(rack, lane)`` axis tuple of a two-level EP topology -- every spec
+    helper shards the model dimension over the *product* either way
+    (PartitionSpec entries accept axis tuples), so TP/EP/vocab/sequence
+    sharding is topology-transparent.
+    """
 
     batch: tuple[str, ...]        # e.g. ("pod", "data") or ("data",)
-    model: str                    # "model"
+    model: str | tuple[str, ...]  # "model" | ("rack", "model")
     sizes: dict[str, int]
 
     @property
@@ -54,7 +76,8 @@ class MeshAxes:
 
     @property
     def model_size(self) -> int:
-        return self.sizes[self.model]
+        m = (self.model,) if isinstance(self.model, str) else self.model
+        return int(np.prod([self.sizes[a] for a in m]))
 
     def div(self, n: int, axes) -> bool:
         if isinstance(axes, str):
@@ -65,7 +88,7 @@ class MeshAxes:
 def from_ctx(pctx: ParallelCtx) -> MeshAxes:
     sizes = ({a: int(s) for a, s in pctx.mesh.shape.items()}
              if pctx.mesh is not None else {})
-    return MeshAxes(batch=pctx.batch_axes, model=pctx.model_axis, sizes=sizes)
+    return MeshAxes(batch=pctx.batch_axes, model=pctx.ep_axes, sizes=sizes)
 
 
 def _mm(ax: MeshAxes, n: int):

@@ -226,7 +226,7 @@ def test_fused_a2a_shard_map_matches_reference():
     out = run_multidevice("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from jax.experimental.shard_map import shard_map
+from repro.models.transformer import shard_map_compat as shard_map
 from repro.core.balancer import BalancerConfig
 from repro.moe.gating import GatingConfig
 from repro.moe.layer import MoEConfig, MoEParams, moe_layer_local
@@ -254,8 +254,7 @@ for impl in ["fused", "reference"]:
     f = shard_map(run, mesh=mesh,
         in_specs=(P("model", None), P(None, None), P("model", None, None),
                   P("model", None, None), P("model", None, None)),
-        out_specs=(P("model", None), P("model")),
-        check_rep=False)
+        out_specs=(P("model", None), P("model")))
     y, drops = jax.jit(f)(x, router, w1, w3, w2)
     assert int(drops.sum()) == 0, impl
     ys[impl] = np.array(y)
