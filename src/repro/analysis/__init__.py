@@ -1,0 +1,43 @@
+"""Static verification layer: plan/schedule invariant checkers + repo lint.
+
+Three cooperating checkers (DESIGN.md S10):
+
+* :mod:`repro.analysis.plan_check` -- statically verifies a solved
+  :class:`repro.core.planner.Plan` against the paper's conservation and
+  topology invariants (token conservation across reroute tiers, quota
+  monotonicity, replica-placement validity, tier accounting).
+* :mod:`repro.analysis.sched_check` -- race/deadlock analysis of
+  :class:`repro.core.comm_plan.RelaySchedule` broadcast trees (dependency
+  cycles, double writes, dangling relays, channel over-subscription).
+* :mod:`repro.analysis.lint` -- an AST pass over ``src/`` with repo-specific
+  JAX rules (axis-name drift, host syncs in jitted paths, float64 literals in
+  kernel/moe code, Python rack loops in shard_map bodies); CLI in
+  ``tools/lint.py``.
+
+All checkers are host-side numpy/AST code with no accelerator dependency, so
+they run in CI on any machine.
+"""
+
+from repro.analysis.violation import Violation, errors, format_violations
+from repro.analysis.plan_check import (
+    PlanViolationError,
+    assert_plan_valid,
+    hosted_matrix,
+    plan_verification,
+    verification_enabled,
+    verify_plan,
+)
+from repro.analysis.sched_check import verify_schedule
+
+__all__ = [
+    "Violation",
+    "errors",
+    "format_violations",
+    "PlanViolationError",
+    "assert_plan_valid",
+    "hosted_matrix",
+    "plan_verification",
+    "verification_enabled",
+    "verify_plan",
+    "verify_schedule",
+]

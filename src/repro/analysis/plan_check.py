@@ -1,0 +1,445 @@
+"""Static verifier for solved balancing plans (DESIGN.md S10).
+
+``verify_plan`` checks a :class:`repro.core.planner.Plan` against the paper's
+conservation and topology invariants *without executing anything*: it is pure
+host-side numpy over the plan's integer tables, so a wrong quota table, a
+reroute split that drops or duplicates tokens, or a replica placement that
+targets a rank holding no instance is caught before a single token moves.
+
+Checked invariants (rule ids):
+
+* ``shape``                  -- table shapes agree with (E, R) and the topology.
+* ``token-conservation``     -- ``q.sum(dst) == lam``, ``q.sum(src) == u``,
+                                ``u.sum(rank) == lam_e``: no token created,
+                                dropped, or duplicated across reroute tiers.
+* ``quota-nonnegative``      -- all quota / reroute entries are >= 0.
+* ``cumsum-consistency``     -- ``cum_q`` / ``cum_u`` are the inclusive
+                                cumsums of ``q`` / ``u`` (monotone by
+                                construction); the dispatch engine's
+                                destination lookup depends on this.
+* ``replica-placement``      -- every rerouted token lands on a rank that
+                                actually holds an instance; ``hosted``
+                                matches ``u`` and the home map; the slot map
+                                ``x`` lists exactly the off-home instances in
+                                expert-id order within the slot budget.
+* ``threshold-bounds``       -- ``post_max == max rank load``, ``pre_max ==
+                                max home load``, ``post_max <= tau <=
+                                pre_max``.
+* ``tier-accounting``        -- ``tier_tokens`` / ``tier_replicas`` match the
+                                reroute matrix and placement under the given
+                                topology, and their sums match the totals.
+* ``rack-local-optimality``  -- (warn) the reroute crosses racks more than
+                                the minimum achievable for its quota table;
+                                expected for the topology-blind EPLB
+                                baselines, a regression for rack-aware modes.
+
+The module also provides the opt-in debug hook used by
+:func:`repro.core.balancer.solve` (enable with :func:`plan_verification`) and
+an exception type for test fixtures.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import numpy as np
+
+from repro.analysis.violation import Violation, errors, format_violations
+
+__all__ = [
+    "PlanViolationError",
+    "verify_plan",
+    "check_capacities",
+    "assert_plan_valid",
+    "hosted_matrix",
+    "plan_verification",
+    "verification_enabled",
+    "verify_solved",
+]
+
+
+class PlanViolationError(AssertionError):
+    """A solved plan failed static verification."""
+
+    def __init__(self, violations: list[Violation]):
+        self.violations = violations
+        super().__init__(
+            f"{len(violations)} plan invariant violation(s):\n"
+            + format_violations(violations)
+        )
+
+
+def _np(x: Any) -> np.ndarray:
+    return np.asarray(x)
+
+
+def hosted_matrix(plan: Any) -> np.ndarray:
+    """(E, R) bool instance indicator in the comm-planner's orientation.
+
+    ``Plan.hosted`` is stored rank-major (R, E) while
+    :func:`repro.core.comm_plan.build_relay_schedule` consumes expert-major
+    (E, R); this helper is the one sanctioned bridge so the transpose never
+    happens by accident at a call site.
+    """
+    return _np(plan.hosted).astype(bool).T
+
+
+def _default_home(E: int, R: int) -> np.ndarray:
+    """Contiguous-block home map (the repo's fixed-mains layout)."""
+    return np.repeat(np.arange(R, dtype=np.int64), E // R)
+
+
+def _rack_of(R: int, rack_size: int) -> np.ndarray:
+    return np.arange(R, dtype=np.int64) // rack_size
+
+
+def _token_tiers(q: np.ndarray, rack_size: int) -> np.ndarray:
+    """Numpy mirror of :func:`repro.core.planner.token_tier_volumes`."""
+    R = q.shape[0]
+    per_pair = q.sum(axis=1)
+    ranks = np.arange(R)
+    same_rank = ranks[:, None] == ranks[None, :]
+    same_rack = (ranks[:, None] // rack_size) == (ranks[None, :] // rack_size)
+    local = per_pair[same_rank].sum()
+    intra = per_pair[same_rack & ~same_rank].sum()
+    inter = per_pair[~same_rack].sum()
+    return np.array([local, intra, inter], dtype=np.int64)
+
+
+def _replica_tiers(u: np.ndarray, home: np.ndarray,
+                   rack_size: int) -> np.ndarray:
+    """Numpy mirror of :func:`repro.core.planner.replica_tier_volumes`."""
+    E, R = u.shape
+    ranks = np.arange(R)
+    is_rep = (u.T > 0) & (home[None, :] != ranks[:, None])
+    same_rack = (ranks[:, None] // rack_size) == (home[None, :] // rack_size)
+    return np.array([(is_rep & same_rack).sum(),
+                     (is_rep & ~same_rack).sum()], dtype=np.int64)
+
+
+def _min_inter_rack_tokens(lam: np.ndarray, u: np.ndarray,
+                           rack_size: int) -> int:
+    """Minimum inter-rack token volume achievable for a fixed quota table.
+
+    Per expert, a rack can absorb at most its own quota of its own demand;
+    the surplus ``max(0, rack_demand - rack_quota)`` must cross racks.  The
+    rack-local reroute tier achieves exactly this bound (see
+    ``planner.solve_reroute``); topology-blind reroutes exceed it.
+    """
+    R, E = lam.shape
+    G = R // rack_size
+    demand_g = lam.T.reshape(E, G, rack_size).sum(axis=2)   # (E, G)
+    quota_g = u.reshape(E, G, rack_size).sum(axis=2)        # (E, G)
+    return int(np.maximum(demand_g - quota_g, 0).sum())
+
+
+def verify_plan(
+    plan: Any,
+    topo: Any = None,
+    *,
+    lam: np.ndarray | None = None,
+    home: np.ndarray | None = None,
+    rack_aware_mode: bool | None = None,
+) -> list[Violation]:
+    """Statically verify a solved plan; returns all violations found.
+
+    Args:
+      plan: a :class:`repro.core.planner.Plan` (or any object with the same
+        fields) of *concrete* integer tables.
+      topo: optional :class:`repro.core.topology.Topology`; switches on the
+        topology checks (tier accounting, rack-local optimality).  ``None``
+        verifies the flat invariants only.
+      lam: optional (R, E) load matrix.  When omitted it is recovered from
+        the reroute marginal ``q.sum(dst)`` (exact for any conserving plan).
+      home: optional (E,) home map; defaults to the repo's contiguous-block
+        layout.
+      rack_aware_mode: whether the producing balancer claims rack-local
+        optimality (ultraep / lplb with the rack tier).  ``None`` keeps the
+        optimality check at "warn" severity; ``True`` promotes it to an
+        error; ``False`` skips it (the EPLB baselines' documented
+        discrepancy -- see DESIGN.md S10).
+    """
+    out: list[Violation] = []
+    q = _np(plan.q).astype(np.int64)
+    u = _np(plan.u).astype(np.int64)
+    x = _np(plan.x).astype(np.int64)
+    hosted = _np(plan.hosted).astype(bool)
+    cum_q = _np(plan.cum_q).astype(np.int64)
+    cum_u = _np(plan.cum_u).astype(np.int64)
+    tau = int(_np(plan.tau))
+    pre_max = int(_np(plan.pre_max))
+    post_max = int(_np(plan.post_max))
+
+    # --- shape ------------------------------------------------------------
+    if u.ndim != 2:
+        return [Violation("shape", f"u must be (E, R), got {u.shape}")]
+    E, R = u.shape
+    if q.shape != (R, E, R):
+        return [Violation("shape",
+                          f"q must be (R, E, R)=({R},{E},{R}), got {q.shape}")]
+    if hosted.shape != (R, E):
+        out.append(Violation("shape",
+                             f"hosted must be (R, E), got {hosted.shape}"))
+    if x.ndim != 2 or x.shape[0] != R:
+        out.append(Violation("shape", f"x must be (R, n_slot), got {x.shape}"))
+    if topo is not None and topo.ep_size != R:
+        out.append(Violation(
+            "shape",
+            f"topology covers {topo.ep_size} ranks but the plan has R={R}"))
+    if out:
+        return out
+    n_slot = x.shape[1]
+
+    if home is None:
+        if E % R != 0:
+            return [Violation("shape", f"E={E} not divisible by R={R} and no "
+                                       "home map given")]
+        home = _default_home(E, R)
+    home = _np(home).astype(np.int64)
+
+    lam_from_q = q.sum(axis=2).astype(np.int64)
+    if lam is None:
+        lam = lam_from_q
+    else:
+        lam = _np(lam).astype(np.int64)
+        if not np.array_equal(lam_from_q, lam):
+            bad = int(np.abs(lam_from_q - lam).sum())
+            out.append(Violation(
+                "token-conservation",
+                f"q.sum(dst) != lam: {bad} token(s) created or dropped by "
+                "the reroute split"))
+
+    # --- non-negativity ---------------------------------------------------
+    if (q < 0).any():
+        out.append(Violation("quota-nonnegative",
+                             f"{int((q < 0).sum())} negative entries in q"))
+    if (u < 0).any():
+        out.append(Violation("quota-nonnegative",
+                             f"{int((u < 0).sum())} negative entries in u"))
+
+    # --- conservation across reroute tiers --------------------------------
+    if not np.array_equal(q.sum(axis=0), u):
+        bad = int(np.abs(q.sum(axis=0) - u).sum())
+        out.append(Violation(
+            "token-conservation",
+            f"q.sum(src) != u: instance loads disagree with the reroute "
+            f"matrix by {bad} token(s)"))
+    lam_e = lam.sum(axis=0)
+    if not np.array_equal(u.sum(axis=1), lam_e):
+        bad = np.where(u.sum(axis=1) != lam_e)[0]
+        out.append(Violation(
+            "token-conservation",
+            f"u.sum(rank) != lam_e for expert(s) {bad.tolist()[:8]}: load "
+            "not fully assigned to instances"))
+
+    # --- cumulative tables (dispatch lookup contract) ---------------------
+    if not np.array_equal(cum_q, np.cumsum(q, axis=-1)):
+        out.append(Violation(
+            "cumsum-consistency",
+            "cum_q != inclusive cumsum of q: token_targets would misroute"))
+    if not np.array_equal(cum_u, np.cumsum(u, axis=-1)):
+        out.append(Violation(
+            "cumsum-consistency",
+            "cum_u != inclusive cumsum of u: replicated-mode ownership "
+            "lookup would misroute"))
+
+    # --- replica placement ------------------------------------------------
+    ranks = np.arange(R, dtype=np.int64)
+    is_rep = (u.T > 0) & (home[None, :] != ranks[:, None])        # (R, E)
+    want_hosted = (u.T > 0) | (home[None, :] == ranks[:, None])
+    if not np.array_equal(hosted, want_hosted):
+        out.append(Violation(
+            "replica-placement",
+            "hosted != (u > 0 | main): instance indicator disagrees with "
+            "the quota table"))
+    landed = q.sum(axis=0).T > 0                                   # (R, E)
+    stray = landed & ~want_hosted
+    if stray.any():
+        t, e = np.argwhere(stray)[0]
+        out.append(Violation(
+            "replica-placement",
+            f"{int(stray.sum())} (expert, rank) reroute target(s) hold no "
+            f"instance, e.g. expert {e} -> rank {t}: those tokens would be "
+            "dropped at dispatch"))
+    if (is_rep.sum(axis=1) > n_slot).any():
+        r = int(np.argmax(is_rep.sum(axis=1)))
+        out.append(Violation(
+            "replica-placement",
+            f"rank {r} carries {int(is_rep[r].sum())} replicas but has only "
+            f"{n_slot} redundant slots"))
+    # Slot map: exactly the off-home instances, expert-id order, -1 padded.
+    for r in range(R):
+        reps = np.where(is_rep[r])[0]
+        want = np.full(n_slot, -1, dtype=np.int64)
+        want[: min(len(reps), n_slot)] = reps[:n_slot]
+        if not np.array_equal(x[r], want):
+            out.append(Violation(
+                "replica-placement",
+                f"slot map x[{r}]={x[r].tolist()} does not bind the rank's "
+                f"replicas {reps.tolist()} in expert-id order: replica "
+                "weights would stream to the wrong slot"))
+            break
+
+    # --- threshold bookkeeping --------------------------------------------
+    ell = np.zeros(R, dtype=np.int64)
+    np.add.at(ell, home, lam_e)
+    post = int(u.sum(axis=0).max()) if R else 0
+    pre = int(ell.max()) if R else 0
+    if post_max != post:
+        out.append(Violation(
+            "threshold-bounds",
+            f"post_max={post_max} != max post-balance rank load {post}"))
+    if pre_max != pre:
+        out.append(Violation(
+            "threshold-bounds",
+            f"pre_max={pre_max} != max pre-balance rank load {pre}"))
+    if not (post <= tau <= max(pre, post)):
+        out.append(Violation(
+            "threshold-bounds",
+            f"tau={tau} outside [post_max={post}, pre_max={pre}]"))
+
+    # --- topology tiers ---------------------------------------------------
+    rack_size = None
+    if topo is not None and topo.racks > 1:
+        rack_size = topo.ranks_per_rack
+    tier_tokens = getattr(plan, "tier_tokens", None)
+    tier_replicas = getattr(plan, "tier_replicas", None)
+    if rack_size is not None:
+        if tier_tokens is None:
+            out.append(Violation(
+                "tier-accounting", "rack-aware plan carries no tier_tokens",
+                severity="warn"))
+        else:
+            tt = _np(tier_tokens).astype(np.int64)
+            want_tt = _token_tiers(q, rack_size)
+            if not np.array_equal(tt, want_tt):
+                out.append(Violation(
+                    "tier-accounting",
+                    f"tier_tokens={tt.tolist()} != reroute-matrix tiers "
+                    f"{want_tt.tolist()}"))
+            elif int(tt.sum()) != int(q.sum()):
+                out.append(Violation(
+                    "tier-accounting",
+                    f"tier_tokens sums to {int(tt.sum())} but the reroute "
+                    f"matrix moves {int(q.sum())} items"))
+        if tier_replicas is None:
+            out.append(Violation(
+                "tier-accounting", "rack-aware plan carries no tier_replicas",
+                severity="warn"))
+        else:
+            tr = _np(tier_replicas).astype(np.int64)
+            want_tr = _replica_tiers(u, home, rack_size)
+            if not np.array_equal(tr, want_tr):
+                out.append(Violation(
+                    "tier-accounting",
+                    f"tier_replicas={tr.tolist()} != placement tiers "
+                    f"{want_tr.tolist()}"))
+        if rack_aware_mode is not False and not errors(out):
+            actual_inter = int(_token_tiers(q, rack_size)[2])
+            min_inter = _min_inter_rack_tokens(lam, u, rack_size)
+            if actual_inter > min_inter:
+                out.append(Violation(
+                    "rack-local-optimality",
+                    f"reroute carries {actual_inter} inter-rack token(s) but "
+                    f"{min_inter} is achievable for this quota table "
+                    "(topology-blind reroute)",
+                    severity="error" if rack_aware_mode else "warn"))
+    return out
+
+
+def check_capacities(plan: Any, *, cap_pair: int,
+                     cap_slot: int | None = None) -> list[Violation]:
+    """Check static dispatch capacities against a solved plan's demand.
+
+    ``cap_pair`` bounds the (src, dst) pair buffers of the token all_to_all;
+    ``cap_slot`` bounds one physical expert slot (== one instance's quota).
+    A violation means the dispatch engine would silently drop tokens at
+    production rate -- exactly what rack-aware capacity sizing
+    (:func:`repro.moe.layer.default_capacities`) must prevent.
+    """
+    out: list[Violation] = []
+    q = _np(plan.q).astype(np.int64)
+    per_pair = q.sum(axis=1)
+    worst = int(per_pair.max()) if per_pair.size else 0
+    if worst > cap_pair:
+        s, d = np.unravel_index(np.argmax(per_pair), per_pair.shape)
+        out.append(Violation(
+            "pair-capacity-overflow",
+            f"pair ({int(s)}->{int(d)}) carries {worst} items > "
+            f"cap_pair={cap_pair}: dispatch would drop tokens"))
+    if cap_slot is not None:
+        u = _np(plan.u).astype(np.int64)
+        worst_u = int(u.max()) if u.size else 0
+        if worst_u > cap_slot:
+            e, t = np.unravel_index(np.argmax(u), u.shape)
+            out.append(Violation(
+                "slot-capacity-overflow",
+                f"instance (expert {int(e)}, rank {int(t)}) carries "
+                f"{worst_u} items > cap_slot={cap_slot}"))
+    return out
+
+
+def assert_plan_valid(plan: Any, topo: Any = None, **kw) -> None:
+    """Raise :class:`PlanViolationError` on any error-severity violation."""
+    bad = errors(verify_plan(plan, topo, **kw))
+    if bad:
+        raise PlanViolationError(bad)
+
+
+# --------------------------------------------------------------------------
+# Opt-in debug hook for repro.core.balancer.solve.
+# --------------------------------------------------------------------------
+
+_STATE = {"enabled": False}
+
+
+def verification_enabled() -> bool:
+    return _STATE["enabled"]
+
+
+@contextlib.contextmanager
+def plan_verification(enabled: bool = True):
+    """Context manager enabling the balancer's plan-verification hook.
+
+    Inside the context every *concrete* (non-traced) plan produced by
+    :func:`repro.core.balancer.solve` is verified and error-severity
+    violations raise :class:`PlanViolationError`.  Traced solves (inside jit
+    / shard_map) are skipped: the hook is a debug aid, not a graph op.
+    The tier-1 test suite enables this for every test via an autouse fixture.
+    """
+    prev = _STATE["enabled"]
+    _STATE["enabled"] = enabled
+    try:
+        yield
+    finally:
+        _STATE["enabled"] = prev
+
+
+def _is_traced(*arrays: Any) -> bool:
+    import jax
+
+    return any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+def verify_solved(plan: Any, *, lam: Any, home: Any,
+                  rack_size: int | None, mode: str) -> None:
+    """Balancer-side hook body: verify when enabled and concrete."""
+    if not verification_enabled():
+        return
+    if _is_traced(plan.u, plan.q, lam):
+        return
+    from repro.core.topology import Topology
+
+    R = int(_np(lam).shape[0])
+    topo = (Topology(racks=R // rack_size, ranks_per_rack=rack_size)
+            if rack_size else Topology.flat(R))
+    # EPLB's round-robin reroute is documented topology-blind: keep its
+    # rack-local-optimality finding at warn severity; every other mode goes
+    # through the rack-local reroute tier and must meet the bound exactly
+    # (DESIGN.md S10).
+    rack_aware = None if mode in ("eplb", "eplb_plus") else True
+    bad = errors(verify_plan(plan, topo, lam=lam, home=home,
+                             rack_aware_mode=rack_aware))
+    if bad:
+        raise PlanViolationError(bad)

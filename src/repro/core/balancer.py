@@ -17,6 +17,7 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import plan_check as _plan_check
 from repro.core import planner
 from repro.core.eplb import eplb_replication_jit, round_robin_reroute_jax
 from repro.core.planner import Plan
@@ -94,11 +95,19 @@ def solve(
     home = home.astype(_I32)
     R, E = lam.shape
 
+    def _checked(plan: Plan) -> Plan:
+        # Opt-in static verification (repro.analysis.plan_check): no-op
+        # unless enabled via plan_verification(), and skipped for traced
+        # plans (the verifier needs concrete values).
+        _plan_check.verify_solved(plan, lam=lam, home=home,
+                                  rack_size=rack_size, mode=cfg.mode)
+        return plan
+
     if cfg.mode in ("none", "ideal"):
-        return no_balance_plan(lam, home, cfg.n_slot, rack_size)
+        return _checked(no_balance_plan(lam, home, cfg.n_slot, rack_size))
 
     if cfg.mode == "ultraep":
-        return planner.solve_plan(
+        return _checked(planner.solve_plan(
             lam,
             home,
             n_slot=cfg.n_slot,
@@ -107,7 +116,7 @@ def solve(
             max_replicas_per_expert=cfg.max_replicas_per_expert,
             probe_parallelism=cfg.probe_parallelism,
             rack_size=rack_size,
-        )
+        ))
 
     if cfg.mode in ("eplb", "eplb_plus"):
         est = lam.sum(axis=0).astype(jnp.float32)
@@ -119,21 +128,23 @@ def solve(
         )  # (E, R)
         q = round_robin_reroute_jax(lam, hosted)
         u = q.sum(axis=0).astype(_I32)
-        return _finish_plan(lam, u, q, home, cfg.n_slot, rack_size)
+        return _checked(_finish_plan(lam, u, q, home, cfg.n_slot, rack_size))
 
     if cfg.mode == "lplb":
         import numpy as np
 
         from repro.core.lplb import lplb_plan
 
-        est = None if lam_e_est is None else np.asarray(lam_e_est)
-        u, hosted, _tau = lplb_plan(np.asarray(lam), np.asarray(home),
+        # lplb is the documented host-side numpy mode (module docstring):
+        # these syncs are intentional and never run under jit.
+        est = None if lam_e_est is None else np.asarray(lam_e_est)  # uep-lint: disable=host-sync
+        u, hosted, _tau = lplb_plan(np.asarray(lam), np.asarray(home),  # uep-lint: disable=host-sync
                                     cfg.n_slot, est)
         # LPLB's waterfill already fixed the instance loads u; decompose the
         # source-wise split with the same NW-corner rule the quota path uses.
         qj = planner.solve_reroute(lam, jnp.asarray(u, dtype=_I32),
                                    locality=cfg.locality, rack_size=rack_size)
-        return _finish_plan(lam, jnp.asarray(u, dtype=_I32), qj, home,
-                            cfg.n_slot, rack_size)
+        return _checked(_finish_plan(lam, jnp.asarray(u, dtype=_I32), qj,
+                                     home, cfg.n_slot, rack_size))
 
     raise ValueError(f"unknown balancer mode: {cfg.mode}")

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.balancer import BalancerConfig
+from repro.core.topology import Topology
 from repro.configs.base import ModelConfig, layer_kinds
 from repro.models import attention as attn_mod
 from repro.models import ssm as ssm_mod
@@ -200,9 +201,14 @@ def moe_config(cfg: ModelConfig, rcfg: RuntimeConfig, pctx: ParallelCtx,
     )
     bal = dataclasses.replace(rcfg.balancer, n_slot=m.n_slot)
     slots_per_rank = m.num_experts // ep + m.n_slot
+    # Factored mesh: size pair buffers with the per-rack aggregate bound --
+    # the rack-local reroute tier concentrates a source's traffic in-rack,
+    # so the flat ~items/ep_size expectation under-provisions (silent drops).
+    topo = (Topology(racks=pctx.racks, ranks_per_rack=ep // pctx.racks)
+            if pctx.rack_axis is not None and pctx.racks > 1 else None)
     cap_pair, cap_slot = default_capacities(
         tokens_per_rank, m.top_k, ep, slots_per_rank,
-        cf_pair=rcfg.cf_pair, cf_slot=rcfg.cf_slot,
+        cf_pair=rcfg.cf_pair, cf_slot=rcfg.cf_slot, topology=topo,
     )
     if pctx.rack_axis is not None and dispatch_mode == "a2a":
         dispatch_mode = "hier_a2a"   # factored mesh: tiered token exchange

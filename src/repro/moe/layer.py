@@ -130,7 +130,8 @@ class MoEStats(NamedTuple):
 
 def default_capacities(tokens_per_rank: int, top_k: int, ep_size: int,
                        slots_per_rank: int, *, cf_pair: float = 2.0,
-                       cf_slot: float = 2.0) -> tuple[int, int]:
+                       cf_slot: float = 2.0,
+                       topology=None) -> tuple[int, int]:
     """Static capacity bounds sized off the balanced expectation.
 
     Balanced dispatch sends ~T*k/R items per (src,dst) pair and lands ~T*k
@@ -138,9 +139,22 @@ def default_capacities(tokens_per_rank: int, top_k: int, ep_size: int,
     safety margin for residual imbalance.  Unbalanced runs need cf ~= the
     pre-balance imbalance ratio (1.3-4x per the paper) -- this is exactly how
     balancing shows up as memory savings (Fig. 14).
+
+    ``topology`` (a :class:`repro.core.topology.Topology`) switches on the
+    rack-aware pair bound.  The rack-local reroute tier deliberately
+    *concentrates* a source rank's traffic onto in-rack destinations, so per
+    (src, dst) pair traffic is no longer ~items/ep_size: the static analysis
+    layer showed skewed rack-aware solves exceeding the flat bound by >2x
+    (silent drops at dispatch).  The per-rack aggregate bound sizes the pair
+    buffer for all of a source's traffic to one *rack* landing on a single
+    rank: ``ceil(items * cf_pair / racks)``.  Flat topologies (racks == 1)
+    are unchanged.
     """
     items = tokens_per_rank * top_k
-    cap_pair = max(8, int(-(-items * cf_pair // ep_size)))
+    if topology is not None and topology.racks > 1:
+        cap_pair = max(8, int(-(-items * cf_pair // topology.racks)))
+    else:
+        cap_pair = max(8, int(-(-items * cf_pair // ep_size)))
     cap_slot = max(8, int(-(-items * cf_slot // slots_per_rank)))
     return cap_pair, cap_slot
 

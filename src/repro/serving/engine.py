@@ -101,7 +101,9 @@ class ServingEngine:
                     self._advance(self.clock_fn() if self.clock_fn else 0.0)
                     pos += len(chunk)
                 req.first_token_at = self.now
-                first = int(np.argmax(np.asarray(last_logits)[0, -1]))
+                # Host-side scheduling layer (module docstring): reading
+                # results back is the point, never under jit.
+                first = int(np.argmax(np.asarray(last_logits)[0, -1]))  # uep-lint: disable=host-sync
                 req.output = [first]
                 self.decoding.append((req, cache))
 
@@ -109,11 +111,11 @@ class ServingEngine:
             if self.decoding and (len(self.decoding) >= self.cfg.decode_batch
                                   or not self.waiting):
                 group = self.decoding[: self.cfg.decode_batch]
-                toks = np.array([[r.output[-1]] for r, _ in group], np.int32)
+                toks = np.array([[r.output[-1]] for r, _ in group], np.int32)  # uep-lint: disable=host-sync
                 caches = self.stack_caches([c for _, c in group])
                 logits, caches = self.decode_fn(jnp.asarray(toks), caches)
                 self._advance(self.clock_fn() if self.clock_fn else 0.0)
-                nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+                nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))  # uep-lint: disable=host-sync
                 still = []
                 for i, (r, _) in enumerate(group):
                     r.output.append(int(nxt[i]))

@@ -12,3 +12,18 @@ import pytest
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _verify_plans():
+    """Statically verify every concrete plan produced by balancer.solve.
+
+    Enables the opt-in plan-verification hook (repro.analysis.plan_check)
+    for all tests: any plan-producing test that solves outside jit gets its
+    conservation / placement / tier invariants checked for free.  Traced
+    solves are skipped by the hook itself.
+    """
+    from repro.analysis import plan_check
+
+    with plan_check.plan_verification():
+        yield

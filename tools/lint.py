@@ -1,0 +1,18 @@
+#!/usr/bin/env python
+"""CLI for the repo-specific JAX lint (repro.analysis.lint).
+
+Usage: python tools/lint.py [paths...]   (default: src)
+
+Exits non-zero on any unsuppressed violation; suppress per line with
+``# uep-lint: disable=<rule>`` (see DESIGN.md S10 for the rule list).
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.analysis.lint import main  # noqa: E402
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,118 @@
+#!/usr/bin/env python
+"""Property sweep: statically verify solved plans + relay schedules (CI).
+
+Solves every balancer mode over a small grid of (E, R, topology, skew)
+configurations on CPU, runs :func:`repro.analysis.plan_check.verify_plan`
+on each plan and :func:`repro.analysis.sched_check.verify_schedule` on the
+relay schedule built from it, and fails (exit 1) on any error-severity
+violation.  Warn-severity findings (e.g. the EPLB baselines' documented
+topology-blind reroute) are printed but do not fail the sweep.
+
+Run locally with ``python tools/verify_plans.py``; CI runs it in the
+lint-and-verify job.  ``--seeds N`` widens the sweep.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np  # noqa: E402
+
+MODES = ("none", "eplb", "eplb_plus", "lplb", "ultraep")
+
+# (E, R, rack_size or None): flat, rack-aware, and 1-rack degenerate shapes.
+GRID = (
+    (8, 4, None),
+    (16, 4, None),
+    (16, 8, 4),
+    (32, 8, 4),
+    (32, 8, 8),     # 1-rack degenerate: rack tier must collapse to flat
+    (64, 16, 4),
+)
+SKEWS = ("uniform", "zipf", "onehot")
+
+
+def _loads(rng: np.random.Generator, E: int, R: int, skew: str) -> np.ndarray:
+    if skew == "uniform":
+        lam = rng.integers(0, 64, size=(R, E))
+    elif skew == "zipf":
+        w = 1.0 / np.arange(1, E + 1) ** 1.2
+        lam = rng.poisson(256 * w[None, :] / w.sum(), size=(R, E))
+    else:  # onehot: all ranks hammer one expert
+        lam = np.zeros((R, E), dtype=np.int64)
+        lam[:, int(rng.integers(E))] = int(rng.integers(64, 256))
+    return lam.astype(np.int64)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--seeds", type=int, default=2,
+                    help="random seeds per (grid, skew, mode) cell")
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    import jax
+    jax.config.update("jax_platforms", "cpu")
+    import jax.numpy as jnp
+
+    from repro.analysis import plan_check, sched_check
+    from repro.analysis.violation import errors, warnings
+    from repro.core import balancer, comm_plan
+    from repro.core.topology import Topology
+
+    n_cells = n_err = n_warn = 0
+    failed: list[str] = []
+    warn_rules: dict[str, int] = {}
+
+    for E, R, rack_size in GRID:
+        topo = (Topology(racks=R // rack_size, ranks_per_rack=rack_size)
+                if rack_size else Topology.flat(R))
+        home = jnp.repeat(jnp.arange(R, dtype=jnp.int32), E // R)
+        for skew in SKEWS:
+            for mode in MODES:
+                for seed in range(args.seeds):
+                    rng = np.random.default_rng(
+                        hash((E, R, rack_size, skew, mode, seed)) % 2**32)
+                    lam = jnp.asarray(_loads(rng, E, R, skew), dtype=jnp.int32)
+                    cfg = balancer.BalancerConfig(mode=mode, n_slot=2)
+                    plan = balancer.solve(lam, home, cfg, rack_size=rack_size)
+                    rack_aware = (None if mode in ("eplb", "eplb_plus")
+                                  else True)
+                    vio = plan_check.verify_plan(
+                        plan, topo, lam=np.asarray(lam),
+                        home=np.asarray(home), rack_aware_mode=rack_aware)
+
+                    hosted = plan_check.hosted_matrix(plan)
+                    sched = comm_plan.build_relay_schedule(
+                        hosted, np.asarray(home), 1 << 20,
+                        num_ranks=R, topology=topo)
+                    vio += sched_check.verify_schedule(
+                        sched, home=np.asarray(home), hosted=hosted,
+                        topology=topo)
+
+                    n_cells += 1
+                    cell = (f"E={E} R={R} rack={rack_size} skew={skew} "
+                            f"mode={mode} seed={seed}")
+                    for v in errors(vio):
+                        n_err += 1
+                        failed.append(f"{cell}: {v}")
+                    for v in warnings(vio):
+                        n_warn += 1
+                        warn_rules[v.rule] = warn_rules.get(v.rule, 0) + 1
+                        if args.verbose:
+                            print(f"{cell}: {v}")
+
+    for line in failed[:40]:
+        print(line)
+    if warn_rules:
+        print(f"warnings: {warn_rules}")
+    print(f"{n_cells} plans verified: {n_err} error(s), {n_warn} warning(s)")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
