@@ -13,6 +13,7 @@ dispatch+bucket+combine permutation pipeline is timed for both
 
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import numpy as np
@@ -166,8 +167,22 @@ def run(quiet=False, E=64, k=4, D=64, F=128, T=2048, mode="ultraep"):
     t_bwd = _time(jax.jit(jax.grad(lambda x: (moe_layer_local(
         x, params, cfg, axis_name=None)[0] ** 2).sum())), x)
 
+    # Chunked overlap (repro.moe.stages): same layer with the dispatch ->
+    # FFN -> combine tail software-pipelined over 2/4 token chunks sharing
+    # one plan.  On CPU this measures the chunking overhead floor; on real
+    # fabrics the a2a of chunk i+1 hides under chunk i's FFN.
+    t_fwd_ov = {}
+    for C in (2, 4):
+        cfg_ov = dataclasses.replace(cfg, overlap_chunks=C)
+        t_fwd_ov[C] = _time(jax.jit(lambda x, c=cfg_ov: moe_layer_local(
+            x, params, c, axis_name=None)[0]), x)
+
     rows = dict(gate_ms=t_gate, solve_ms=t_solve, dispatch_ms=t_disp,
-                grouped_ffn_ms=t_ffn, full_fwd_ms=t_fwd, full_bwd_ms=t_bwd,
+                grouped_ffn_ms=t_ffn, full_fwd_ms=t_fwd,
+                full_fwd_overlap2_ms=t_fwd_ov[2],
+                full_fwd_overlap4_ms=t_fwd_ov[4],
+                overlap_speedup=t_fwd / t_fwd_ov[2],
+                full_bwd_ms=t_bwd,
                 solve_frac=t_solve / t_fwd)
     rows.update(permutation_pipelines(quiet=quiet, E=E, k=k, D=D, F=F, T=T,
                                       mode=mode))

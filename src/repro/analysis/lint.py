@@ -27,6 +27,15 @@ with ``# uep-lint: skip-file`` in its first ten lines):
                          unrolls per rack into the graph, breaking the
                          topology-transparency contract (use vectorised
                          rack-major reshapes as in ``two_hop_all_to_all``).
+* ``stage-boundary``  -- the MoE dispatch/permute/distribute engine
+                         primitives (``fused_dispatch``, ``fused_bucket``,
+                         ``materialize_replicas``, ...) may only be called
+                         from the staged execution layer
+                         (``repro.moe.stages``) and the engine modules
+                         themselves.  Everything else must go through the
+                         typed stage outputs of :mod:`repro.moe.stages`
+                         (DESIGN.md S11) -- ad-hoc cross-stage plumbing is
+                         how the pre-refactor layer monolith grew.
 
 Functions are considered *traced* when their bodies reference ``jnp`` /
 ``jax.lax`` / ``jax.nn`` -- a deliberate over-approximation: host-side numpy
@@ -60,7 +69,8 @@ class LintViolation:
                f"{self.message}"
 
 
-RULES = ("axis-name", "host-sync", "float64-literal", "rack-loop")
+RULES = ("axis-name", "host-sync", "float64-literal", "rack-loop",
+         "stage-boundary")
 
 # Canonical mesh-axis vocabulary: ParallelCtx defaults (batch_axes=("data",),
 # model_axis="model") plus the documented factored/mesh extras ("pod" FSDP
@@ -90,6 +100,26 @@ _SKIP_FILE_RE = re.compile(r"#\s*uep-lint:\s*skip-file")
 
 # float64-literal applies only where kernel/moe code lives.
 _F64_PATH_PARTS = ("kernels", "moe")
+
+# stage-boundary: engine primitives whose call sites are confined to the
+# staged execution layer and the engine modules themselves.  Keep in sync
+# with repro.moe.stages (DESIGN.md S11).
+_STAGE_PRIMS = frozenset({
+    "fused_dispatch", "fused_bucket", "fused_unbucket", "fused_combine",
+    "fused_replicated_bucket", "fused_replicated_combine",
+    "two_hop_all_to_all", "materialize_replicas", "materialize_replica_stack",
+    "dispatch_tokens", "bucket_by_slot", "unbucket", "combine_tokens",
+})
+# moe/ module stems allowed to call them: the stage driver plus the modules
+# that define (and internally compose) the primitives.
+_STAGE_EXEMPT_STEMS = frozenset(
+    {"stages", "permute", "distribute", "dispatch", "expert"})
+
+
+def _stage_exempt(path: str) -> bool:
+    parts = Path(path).parts
+    return (len(parts) >= 2 and parts[-2] == "moe"
+            and Path(path).stem in _STAGE_EXEMPT_STEMS)
 
 
 def _dotted(node: ast.AST) -> str:
@@ -175,6 +205,7 @@ class _FileLinter:
     def __init__(self, path: str, tree: ast.Module, check_f64: bool):
         self.path = path
         self.check_f64 = check_f64
+        self.check_stage = not _stage_exempt(path)
         self.tree = tree
         self.found: dict[tuple[int, int, str], LintViolation] = {}
 
@@ -185,9 +216,18 @@ class _FileLinter:
                                rule, message))
 
     def run(self) -> list[LintViolation]:
-        # Module-wide rules (axis names, float64 literals).
+        # Module-wide rules (axis names, float64 literals, stage boundary).
         for node in ast.walk(self.tree):
             if isinstance(node, ast.Call):
+                if self.check_stage:
+                    prim = _dotted(node.func).rsplit(".", 1)[-1]
+                    if prim in _STAGE_PRIMS:
+                        self.emit(
+                            node, "stage-boundary",
+                            f"{prim}() is a cross-stage engine primitive; "
+                            "outside repro.moe.stages go through the typed "
+                            "stage outputs (run_staged_moe / the stage "
+                            "functions) instead of calling it directly")
                 for lit in _axis_literals(node):
                     if lit.value not in ALLOWED_AXIS_NAMES:
                         self.emit(

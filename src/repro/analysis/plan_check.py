@@ -50,6 +50,7 @@ from repro.analysis.violation import Violation, errors, format_violations
 __all__ = [
     "PlanViolationError",
     "verify_plan",
+    "verify_chunking",
     "check_capacities",
     "assert_plan_valid",
     "hosted_matrix",
@@ -345,6 +346,85 @@ def verify_plan(
                     f"{min_inter} is achievable for this quota table "
                     "(topology-blind reroute)",
                     severity="error" if rack_aware_mode else "warn"))
+    return out
+
+
+def verify_chunking(plan: Any, chunk_lam: Any, *, cap_pair: int | None = None,
+                    cap_slot: int | None = None) -> list[Violation]:
+    """Verify the overlap driver's per-chunk buffer invariants statically.
+
+    The staged driver (:mod:`repro.moe.stages`) dispatches a microbatch in
+    token chunks sharing ONE plan, continuing each expert's occurrence index
+    across chunks -- so chunk ``c``'s share of source ``s``'s expert-``e``
+    items is the overlap of the occurrence interval ``[lo, hi)`` accumulated
+    by chunks ``<= c`` with each destination's quota interval in ``cum_q``.
+    This mirrors that routing in host numpy and checks, per chunk:
+
+    * ``chunk-conservation`` -- the chunk loads sum to the plan's load
+      (``chunk_lam.sum(0) == q.sum(dst)``) and the per-chunk routed counts
+      sum to the reroute matrix (``qc.sum(0) == q``): chunking moves every
+      item exactly once, to the same destination as the unchunked dispatch.
+    * ``chunk-capacity`` -- every chunk's per-(src, dst) pair traffic fits
+      ``cap_pair`` and every chunk's per-instance load fits ``cap_slot``.
+      Because each chunk's traffic is a *subset* of the unchunked traffic,
+      capacities that are drop-free unchunked stay drop-free chunked; a
+      violation here means the chunk split itself would drop tokens.
+
+    Args:
+      plan: a solved :class:`repro.core.planner.Plan`.
+      chunk_lam: (C, R, E) per-chunk per-source per-expert load counts.
+      cap_pair / cap_slot: optional static capacities to check against.
+    """
+    out: list[Violation] = []
+    cl = _np(chunk_lam).astype(np.int64)
+    q = _np(plan.q).astype(np.int64)                         # (R, E, R)
+    cum_q = _np(plan.cum_q).astype(np.int64)
+    if cl.ndim != 3 or cl.shape[1:] != q.shape[:2]:
+        return [Violation(
+            "shape", f"chunk_lam must be (C, R, E)=(C,{q.shape[0]},"
+                     f"{q.shape[1]}), got {cl.shape}")]
+    lam = q.sum(axis=2)                                      # (R, E)
+    if not np.array_equal(cl.sum(axis=0), lam):
+        bad = int(np.abs(cl.sum(axis=0) - lam).sum())
+        out.append(Violation(
+            "chunk-conservation",
+            f"chunk loads disagree with the plan's load by {bad} token(s): "
+            "the chunk split loses or invents items"))
+    # Per-chunk routed counts by occurrence-interval / quota-interval overlap
+    # (the numpy mirror of fused_dispatch + chunk_occ_offsets).
+    hi = np.cumsum(cl, axis=0)                               # (C, R, E) incl
+    lo = hi - cl
+    prev = np.concatenate(
+        [np.zeros_like(cum_q[..., :1]), cum_q[..., :-1]], axis=-1)
+    qc = np.clip(
+        np.minimum(hi[..., None], cum_q[None])
+        - np.maximum(lo[..., None], prev[None]),
+        0, None)                                             # (C, S, E, D)
+    if not np.array_equal(qc.sum(axis=0), q):
+        bad = int(np.abs(qc.sum(axis=0) - q).sum())
+        out.append(Violation(
+            "chunk-conservation",
+            f"per-chunk routing does not sum to the reroute matrix "
+            f"({bad} item(s) off): the occurrence offsets would route a "
+            "chunked item to a different instance than unchunked"))
+    if cap_pair is not None:
+        per_pair = qc.sum(axis=2)                            # (C, S, D)
+        worst = int(per_pair.max()) if per_pair.size else 0
+        if worst > cap_pair:
+            c, s, d = np.unravel_index(np.argmax(per_pair), per_pair.shape)
+            out.append(Violation(
+                "chunk-capacity",
+                f"chunk {int(c)} pair ({int(s)}->{int(d)}) carries {worst} "
+                f"items > cap_pair={cap_pair}: chunked dispatch would drop"))
+    if cap_slot is not None:
+        per_inst = qc.sum(axis=1)                            # (C, E, D)
+        worst = int(per_inst.max()) if per_inst.size else 0
+        if worst > cap_slot:
+            c, e, d = np.unravel_index(np.argmax(per_inst), per_inst.shape)
+            out.append(Violation(
+                "chunk-capacity",
+                f"chunk {int(c)} instance (expert {int(e)}, rank {int(d)}) "
+                f"carries {worst} items > cap_slot={cap_slot}"))
     return out
 
 

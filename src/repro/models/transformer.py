@@ -70,6 +70,9 @@ class RuntimeConfig:
     cf_pair: float = 2.0
     cf_slot: float = 2.0
     distribute_chunks: int = 1
+    overlap_chunks: int = 1        # MoE dispatch/compute overlap chunks
+    # (repro.moe.stages); falls back to 1 per layer when the local token
+    # count is not divisible or the dispatch engine is "reference".
     use_kernel: bool = False
     dispatch_impl: str = "fused"   # "fused" | "reference" MoE dispatch engine
     block_kv: int = 512
@@ -212,11 +215,19 @@ def moe_config(cfg: ModelConfig, rcfg: RuntimeConfig, pctx: ParallelCtx,
     )
     if pctx.rack_axis is not None and dispatch_mode == "a2a":
         dispatch_mode = "hier_a2a"   # factored mesh: tiered token exchange
+    # Overlap chunking must divide the per-rank token count and needs the
+    # fused engine (the reference path is the unchunked oracle); rather
+    # than fail deep inside a scanned block, degrade to unchunked here.
+    overlap = rcfg.overlap_chunks
+    if overlap >= 1 and (tokens_per_rank % overlap != 0
+                         or rcfg.dispatch_impl != "fused"):
+        overlap = 1   # overlap < 1 passes through to MoEConfig's validation
     return MoEConfig(
         gating=gating, balancer=bal, d_model=cfg.d_model, d_ff=m.d_ff,
         ep_size=ep, cap_pair=cap_pair, cap_slot=cap_slot,
         n_shared_experts=m.n_shared_experts, shared_d_ff=m.shared_d_ff,
-        distribute_chunks=rcfg.distribute_chunks, use_kernel=rcfg.use_kernel,
+        distribute_chunks=rcfg.distribute_chunks, overlap_chunks=overlap,
+        use_kernel=rcfg.use_kernel,
         dispatch_mode=dispatch_mode, dispatch_impl=rcfg.dispatch_impl,
         racks=pctx.racks,
     )

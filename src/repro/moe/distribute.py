@@ -22,10 +22,13 @@ each rank *receives* exactly its N_slot inbound replicas.
 
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
-__all__ = ["replica_selector", "select_local_replicas", "materialize_replicas"]
+__all__ = ["replica_selector", "select_local_replicas", "materialize_replicas",
+           "materialize_replica_stack"]
 
 
 def replica_selector(x_slots_flat: jax.Array, local_expert_base: jax.Array,
@@ -154,3 +157,45 @@ def materialize_replicas(
             )
         )
     return jnp.concatenate(outs, axis=-1)
+
+
+def materialize_replica_stack(
+    ws: tuple[jax.Array, ...],
+    x_slots: jax.Array,
+    my_rank: jax.Array,
+    axis_name: str | tuple[str, str] | None,
+    *,
+    n_chunks: int = 1,
+    racks: int = 1,
+) -> tuple[jax.Array, ...]:
+    """One collective schedule for several per-expert weight tensors.
+
+    Streaming w1/w3/w2 as three independent :func:`materialize_replicas`
+    calls pays three collective launch schedules (and three tile-streaming
+    loops) for traffic that shares one (slot -> home) routing.  This packs
+    every tensor's trailing dims into one (E_local, 1, total) matrix, runs a
+    single transfer, and splits the result back.  ``psum_scatter`` is
+    elementwise over the packed axis, so each returned tensor is
+    bit-identical to its standalone transfer; ``n_chunks`` tiles the packed
+    payload instead of each tensor separately.
+
+    Args:
+      ws: per-expert weight tensors, each (E_local, ...) with identical
+        leading dim (e.g. ``(w1, w3, w2)``).
+
+    Returns:
+      A tuple of replica tensors, the i-th shaped ``(N_slot,) + ws[i].shape[1:]``.
+    """
+    epr = ws[0].shape[0]
+    sizes = [math.prod(w.shape[1:]) for w in ws]
+    packed = jnp.concatenate(
+        [w.reshape(epr, 1, -1) for w in ws], axis=-1)     # (E_local, 1, tot)
+    rep = materialize_replicas(packed, x_slots, my_rank, axis_name,
+                               n_chunks=n_chunks, racks=racks)
+    n_slot = rep.shape[0]
+    out = []
+    off = 0
+    for w, sz in zip(ws, sizes):
+        out.append(rep[:, 0, off:off + sz].reshape((n_slot,) + w.shape[1:]))
+        off += sz
+    return tuple(out)

@@ -7,6 +7,14 @@ Per EP rank (inside ``shard_map`` over the EP axis), one MoE layer executes:
        -> token all_to_all -> grouped FFN over physical slots
        -> inverse all_to_all -> weighted combine (+ shared experts)
 
+The execution itself lives in :mod:`repro.moe.stages` as six typed stages
+(gate/plan/distribute/dispatch/compute/combine, DESIGN.md S11);
+:func:`moe_layer_local` is the public entry point that owns the config and
+parameter containers and delegates to the staged driver.  With
+``overlap_chunks > 1`` the dispatch->compute->combine tail is software-
+pipelined over token chunks sharing one plan, hiding the all_to_all under
+the grouped FFN while staying bit-identical at zero-drop capacities.
+
 Backward is derived by ``jax.grad``: the replica-weight collective transposes
 into the replica-gradient reduction onto mains (S4.2), and a
 ``jax.checkpoint`` policy re-materialises replica weights instead of saving
@@ -21,34 +29,13 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import balancer as balancer_mod
 from repro.core.balancer import BalancerConfig
-from repro.core.layout import ExpertLayout, physical_slot_of
-from repro.core.planner import token_targets
-from repro.moe.dispatch import (
-    bucket_by_slot,
-    combine_tokens,
-    dispatch_tokens,
-    unbucket,
-)
-from repro.moe.distribute import materialize_replicas
-from repro.moe.permute import (
-    fused_bucket,
-    fused_combine,
-    fused_dispatch,
-    fused_replicated_bucket,
-    fused_replicated_combine,
-    fused_unbucket,
-    two_hop_all_to_all,
-)
-from repro.moe.expert import grouped_ffn
-from repro.moe.gating import GateOut, GatingConfig, gate
-from repro.moe.reference import swiglu
+from repro.core.layout import ExpertLayout
+from repro.moe.gating import GatingConfig
+from repro.moe.stages import MoEStats, run_staged_moe
 
 __all__ = ["MoEConfig", "MoEParams", "MoEStats", "moe_layer_local",
            "init_moe_params", "default_capacities"]
-
-_I32 = jnp.int32
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +50,11 @@ class MoEConfig:
     n_shared_experts: int = 0      # DeepSeek shared (always-on) experts
     shared_d_ff: int = 0
     distribute_chunks: int = 1     # tile-streaming chunk knob
+    overlap_chunks: int = 1        # dispatch/compute overlap: token chunks
+    # sharing ONE plan, software-pipelined so chunk i+1's all_to_all runs
+    # under chunk i's grouped FFN (repro.moe.stages; DESIGN.md S11).
+    # Bit-identical to unchunked at zero-drop capacities; must divide the
+    # local token count at call time.
     use_kernel: bool = False       # Pallas grouped-GEMM for expert FFN
     dispatch_mode: str = "a2a"     # "a2a" | "replicated" | "hier_a2a"
     # "replicated": tokens are replicated across the EP axis (decode path /
@@ -91,6 +83,16 @@ class MoEConfig:
         if self.racks < 1 or self.ep_size % self.racks != 0:
             raise ValueError(
                 f"racks={self.racks} must divide ep_size={self.ep_size}")
+        if self.distribute_chunks < 1:
+            raise ValueError(
+                f"distribute_chunks={self.distribute_chunks} must be >= 1")
+        if self.overlap_chunks < 1:
+            raise ValueError(
+                f"overlap_chunks={self.overlap_chunks} must be >= 1")
+        if self.overlap_chunks > 1 and self.dispatch_impl != "fused":
+            raise ValueError(
+                "overlap_chunks > 1 requires dispatch_impl='fused' (the "
+                "reference scatter path is the unchunked equivalence oracle)")
 
     @property
     def ranks_per_rack(self) -> int:
@@ -115,17 +117,6 @@ class MoEParams(NamedTuple):
     shared_w1: jax.Array | None = None   # (D, F_sh)
     shared_w3: jax.Array | None = None
     shared_w2: jax.Array | None = None   # (F_sh, D)
-
-
-class MoEStats(NamedTuple):
-    drops_dispatch: jax.Array   # () items dropped at pair-capacity
-    drops_slot: jax.Array       # () items dropped at slot-capacity
-    pre_max: jax.Array          # () pre-balance max rank load
-    post_max: jax.Array         # () post-balance max rank load
-    max_slot_load: jax.Array    # () busiest physical slot occupancy
-    counts: jax.Array           # (E,) local per-expert load
-    tier_tokens: jax.Array | None = None    # (3,) [local, intra, inter]
-    tier_replicas: jax.Array | None = None  # (2,) [intra, inter] (rack-aware)
 
 
 def default_capacities(tokens_per_rank: int, top_k: int, ep_size: int,
@@ -196,6 +187,11 @@ def moe_layer_local(
 ) -> tuple[jax.Array, jax.Array, MoEStats]:
     """One balanced MoE layer, per-rank view (call under shard_map).
 
+    Thin wrapper over :func:`repro.moe.stages.run_staged_moe` -- the staged
+    driver composes gate/plan/distribute (once per microbatch) with the
+    per-chunk dispatch/compute/combine tail according to
+    ``cfg.dispatch_mode``, ``cfg.dispatch_impl`` and ``cfg.overlap_chunks``.
+
     Args:
       x: (T_local, D) this rank's tokens.
       params: per-rank parameter shard.
@@ -209,196 +205,5 @@ def moe_layer_local(
     Returns:
       (y, aux_loss, stats) with y: (T_local, D).
     """
-    T, D = x.shape
-    layout = cfg.layout
-    R = cfg.ep_size
-    epr = layout.experts_per_rank
-    n_slot = layout.n_slot
-    num_slots = epr + n_slot
-    lanes = cfg.ranks_per_rack
-
-    factored = isinstance(axis_name, (tuple, list))
-    if factored:
-        if len(axis_name) != 2:
-            raise ValueError(
-                f"factored axis_name must be (rack_axis, lane_axis), "
-                f"got {axis_name!r}")
-        if cfg.dispatch_mode == "a2a":
-            raise ValueError(
-                "dispatch_mode='a2a' runs on a flat EP axis; use "
-                "'hier_a2a' on a factored (rack, lane) mesh")
-        rack_axis, lane_axis = axis_name
-    elif cfg.dispatch_mode == "hier_a2a" and axis_name is not None:
-        raise ValueError(
-            "dispatch_mode='hier_a2a' needs a (rack_axis, lane_axis) "
-            "axis_name tuple (or None when ep_size == 1)")
-
-    def my_rank() -> jax.Array:
-        if factored:
-            return (jax.lax.axis_index(rack_axis) * lanes
-                    + jax.lax.axis_index(lane_axis)).astype(_I32)
-        if axis_name is not None:
-            return jax.lax.axis_index(axis_name).astype(_I32)
-        return jnp.asarray(0, _I32)
-
-    def exchange(buf: jax.Array, *, reverse: bool = False) -> jax.Array:
-        """(R, ...) destination-major buffer through the EP fabric."""
-        if factored:
-            return two_hop_all_to_all(buf, racks=cfg.racks,
-                                      rack_axis=rack_axis,
-                                      lane_axis=lane_axis, reverse=reverse)
-        if axis_name is not None:
-            return jax.lax.all_to_all(buf, axis_name, 0, 0, tiled=False)
-        return buf
-
-    gate_out: GateOut = gate(x, params.router, cfg.gating, bias=router_bias)
-
-    # --- exact load matrix (reuses the dispatch notify metadata) -----------
-    home = layout.home()
-    if cfg.dispatch_mode == "replicated":
-        # Tokens are identical on every EP rank, so counts are already the
-        # EP-group totals -- no collective needed.  Attribute the load to the
-        # experts' home ranks (source locality is vacuous here).
-        lam = (jax.nn.one_hot(home, R, dtype=_I32)
-               * gate_out.counts[:, None]).T                        # (R, E)
-        my = my_rank()
-    elif axis_name is not None:
-        if factored:
-            # Two-step gather mirrors the wire: lanes first, then racks,
-            # yielding rack-major (= global rank order) load rows.
-            lam = jax.lax.all_gather(gate_out.counts, lane_axis)   # (L, E)
-            lam = jax.lax.all_gather(lam, rack_axis).reshape(R, -1)
-        else:
-            lam = jax.lax.all_gather(gate_out.counts, axis_name)   # (R, E)
-        my = my_rank()
-    else:
-        if R != 1:
-            raise ValueError("axis_name=None requires ep_size == 1")
-        lam = gate_out.counts[None]
-        my = jnp.asarray(0, _I32)
-    plan = balancer_mod.solve(lam, home, cfg.balancer, lam_e_est=lam_e_est,
-                              rack_size=cfg.rack_size)
-
-    # --- replica weight distribution (overlappable with reroute) ----------
-    w1r = materialize_replicas(params.w1, plan.x, my, axis_name,
-                               n_chunks=cfg.distribute_chunks, racks=cfg.racks)
-    w3r = materialize_replicas(params.w3, plan.x, my, axis_name,
-                               n_chunks=cfg.distribute_chunks, racks=cfg.racks)
-    w2r = materialize_replicas(params.w2, plan.x, my, axis_name,
-                               n_chunks=cfg.distribute_chunks, racks=cfg.racks)
-    w1_all = jnp.concatenate([params.w1, w1r], axis=0)   # (num_slots, D, F)
-    w3_all = jnp.concatenate([params.w3, w3r], axis=0)
-    w2_all = jnp.concatenate([params.w2, w2r], axis=0)
-
-    slot_of_all = physical_slot_of(layout, plan.x)
-
-    if cfg.dispatch_mode == "replicated":
-        # Tokens identical on every EP rank (decode / exact-reference path):
-        # item j of expert e is owned by the instance whose cumulative quota
-        # covers j; this rank computes its share and results are psum-merged.
-        slot_of = slot_of_all[my]
-        if cfg.dispatch_impl == "fused":
-            rb = fused_replicated_bucket(
-                x, gate_out.expert_ids, plan.cum_u, my, slot_of,
-                num_slots=num_slots, cap_slot=cfg.cap_slot,
-            )
-            out = grouped_ffn(rb.xs, rb.valid, w1_all, w3_all, w2_all,
-                              use_kernel=cfg.use_kernel)
-            y = fused_replicated_combine(out, rb, gate_out.weights)
-            valid, slot_drops = rb.valid, rb.drops
-        else:
-            items_e = gate_out.expert_ids.reshape(-1)
-            # (T*k,): u is the one-source split.
-            owner = token_targets(items_e, plan.u)
-            mine = owner == my
-            recv_e = jnp.where(mine, items_e, -1)[None, :]      # (1, T*k)
-            recv_x = jnp.repeat(x, cfg.gating.top_k, axis=0)[None, :, :]
-            xs, valid, back_idx, slot_drops = bucket_by_slot(
-                recv_x, recv_e, slot_of, num_slots=num_slots,
-                cap_slot=cfg.cap_slot
-            )
-            out = grouped_ffn(xs, valid, w1_all, w3_all, w2_all,
-                              use_kernel=cfg.use_kernel)
-            ret = unbucket(out, valid, back_idx, (1, T * cfg.gating.top_k, D))
-            flat_w = gate_out.weights.reshape(-1)
-            items_t = jnp.repeat(jnp.arange(T, dtype=_I32), cfg.gating.top_k)
-            vals = ret[0] * flat_w[:, None].astype(ret.dtype)
-            y = jnp.zeros((T, D), ret.dtype).at[items_t].add(vals)
-        if factored:
-            y = jax.lax.psum(jax.lax.psum(y, lane_axis), rack_axis)
-        elif axis_name is not None:
-            y = jax.lax.psum(y, axis_name)
-        if cfg.n_shared_experts > 0:
-            y = y + swiglu(x, params.shared_w1, params.shared_w3,
-                           params.shared_w2)
-        stats = MoEStats(
-            drops_dispatch=jnp.zeros((), _I32),
-            drops_slot=slot_drops,
-            pre_max=plan.pre_max,
-            post_max=plan.post_max,
-            max_slot_load=valid.sum(axis=1).max().astype(_I32),
-            counts=gate_out.counts,
-            tier_tokens=plan.tier_tokens,
-            tier_replicas=plan.tier_replicas,
-        )
-        return y.astype(x.dtype), gate_out.aux_loss, stats
-
-    # --- reroute + dispatch ------------------------------------------------
-    if cfg.dispatch_impl == "fused":
-        # Single-sort permutation engine: one packed-key sort on the source,
-        # gather-built buffers, count metadata instead of an expert-id wire,
-        # and a sort-free receive side (repro.moe.permute).  On a factored
-        # mesh the same destination-major buffers ride the two-hop tiered
-        # exchange (inter-rack rack-aggregates, then intra-rack scatter);
-        # the count metadata rides both hops unchanged.
-        disp = fused_dispatch(
-            x, gate_out.expert_ids, plan.cum_q[my], slot_of_all,
-            num_slots=num_slots, cap_pair=cfg.cap_pair,
-        )
-        recv_x = exchange(disp.send_x)
-        recv_c = exchange(disp.send_counts)
-        xs, valid, meta, slot_drops = fused_bucket(
-            recv_x, recv_c, num_slots=num_slots, cap_slot=cfg.cap_slot
-        )
-        out = grouped_ffn(xs, valid, w1_all, w3_all, w2_all,
-                          use_kernel=cfg.use_kernel)
-        ret = exchange(fused_unbucket(out, meta), reverse=True)
-        y = fused_combine(ret, disp, gate_out.weights)
-    else:
-        q_row = plan.q[my]                                 # (E, R)
-        disp = dispatch_tokens(x, gate_out.expert_ids, q_row,
-                               cap_pair=cfg.cap_pair)
-        if axis_name is not None:
-            recv_x = jax.lax.all_to_all(disp.send_x, axis_name, 0, 0,
-                                        tiled=False)
-            recv_e = jax.lax.all_to_all(disp.send_e, axis_name, 0, 0,
-                                        tiled=False)
-        else:
-            recv_x, recv_e = disp.send_x, disp.send_e
-
-        slot_of = slot_of_all[my]                          # (E,)
-        xs, valid, back_idx, slot_drops = bucket_by_slot(
-            recv_x, recv_e, slot_of, num_slots=num_slots,
-            cap_slot=cfg.cap_slot
-        )
-        out = grouped_ffn(xs, valid, w1_all, w3_all, w2_all,
-                          use_kernel=cfg.use_kernel)
-        ret = unbucket(out, valid, back_idx, (R, cfg.cap_pair, D))
-        if axis_name is not None:
-            ret = jax.lax.all_to_all(ret, axis_name, 0, 0, tiled=False)
-        y = combine_tokens(ret, disp, gate_out.weights, T)
-
-    if cfg.n_shared_experts > 0:
-        y = y + swiglu(x, params.shared_w1, params.shared_w3, params.shared_w2)
-
-    stats = MoEStats(
-        drops_dispatch=disp.drops,
-        drops_slot=slot_drops,
-        pre_max=plan.pre_max,
-        post_max=plan.post_max,
-        max_slot_load=valid.sum(axis=1).max().astype(_I32),
-        counts=gate_out.counts,
-        tier_tokens=plan.tier_tokens,
-        tier_replicas=plan.tier_replicas,
-    )
-    return y.astype(x.dtype), gate_out.aux_loss, stats
+    return run_staged_moe(x, params, cfg, axis_name=axis_name,
+                          router_bias=router_bias, lam_e_est=lam_e_est)

@@ -169,6 +169,7 @@ def fused_dispatch(
     *,
     num_slots: int,
     cap_pair: int,
+    occ_offset: jax.Array | None = None,
 ) -> FusedDispatch:
     """Single-sort dispatch: pack the key, sort once, gather everything.
 
@@ -181,6 +182,11 @@ def fused_dispatch(
         hosted (``physical_slot_of(layout, plan.x)``, replicated plan state).
       num_slots: physical slots per rank (E/R mains + n_slot redundants).
       cap_pair: static capacity per (src, dst) pair buffer.
+      occ_offset: optional (E,) per-expert occurrence offset.  The overlap
+        driver (``repro.moe.stages``) dispatches the microbatch in token
+        chunks sharing one plan; continuing the occurrence index across
+        chunks makes every item hit the exact same instance as the unchunked
+        dispatch, so the shared quota table stays exactly honoured.
     """
     T, k = expert_ids.shape
     E, R = cum_q_row.shape
@@ -189,6 +195,8 @@ def fused_dispatch(
     e = expert_ids.reshape(-1).astype(_I32)                      # (N,)
     n = e.shape[0]
     occ = occurrence_by_histogram(e, E)                          # no sort
+    if occ_offset is not None:
+        occ = occ + occ_offset[e]
     # Destination rank: first rank whose cumulative quota exceeds occ (S5.2),
     # shared with the reference path so the semantics cannot diverge.
     dst = token_targets(e, cumq=cum_q_row, occ=occ)
@@ -358,6 +366,7 @@ def fused_replicated_bucket(
     *,
     num_slots: int,
     cap_slot: int,
+    occ_offset: jax.Array | None = None,
 ) -> ReplicatedBucket:
     """Replicated-mode bucketing: one sort over this rank's owned share.
 
@@ -372,12 +381,17 @@ def fused_replicated_bucket(
       cum_u: (E, R) inclusive cumulative instance quota (``plan.cum_u``).
       my_rank: scalar EP rank of the caller.
       slot_of: (E,) this rank's physical slot per expert (-1 = not hosted).
+      occ_offset: optional (E,) per-expert occurrence offset continuing the
+        global occurrence index across overlap chunks (see
+        :func:`fused_dispatch`), so chunked ownership equals unchunked.
     """
     T, k = expert_ids.shape
     E = cum_u.shape[0]
     e = expert_ids.reshape(-1).astype(_I32)
     n = e.shape[0]
     occ = occurrence_by_histogram(e, E)
+    if occ_offset is not None:
+        occ = occ + occ_offset[e]
     owner = token_targets(e, cumq=cum_u, occ=occ)
     mine = owner == my_rank
     slot = slot_of[e]

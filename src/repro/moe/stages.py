@@ -1,0 +1,497 @@
+"""Staged MoE execution engine: typed stage boundaries + chunked overlap.
+
+``moe_layer_local`` used to be a ~220-line monolith interleaving gating,
+load gathering, plan solving, replica streaming, dispatch, FFN and combine,
+branched three ways over ``dispatch_mode`` -- with no seam at which chunk
+*i+1*'s dispatch all_to_all could run under chunk *i*'s grouped FFN.  This
+module decomposes it into six explicit stages (DESIGN.md S11):
+
+  GateStage        gate + exact load gather            -> GateState
+  PlanStage        balancer solve + slot table         -> PlanState
+  DistributeStage  stacked replica weight streaming    -> DistributeState
+  DispatchStage    reroute + pack + (two-hop) a2a      -> DispatchState
+  ComputeStage     grouped FFN over physical slots     -> (slots, cap, D)
+  CombineStage     inverse wire + weighted reduce      -> (T_chunk, D)
+
+and rebuilds the layer as :func:`run_staged_moe`, a thin driver that
+composes them per ``dispatch_mode``.  The stage contract: each stage reads
+only the typed state of earlier stages; gate/plan/distribute run ONCE per
+microbatch (the plan is solved on the *full-batch* load, so balancing and
+zero-drop bit-identity are untouched by chunking); dispatch/compute/combine
+run once per overlap chunk.
+
+``MoEConfig.overlap_chunks = N`` splits the microbatch into N token chunks
+sharing that one plan and software-pipelines them: chunk *i+1*'s dispatch
+(including its all_to_all) is issued before chunk *i*'s FFN + combine
+consume their buffers, so the XLA latency-hiding scheduler can run the wire
+under compute -- double-buffered through the packed (dst, slot) machinery
+of :mod:`repro.moe.permute`.  Per-expert occurrence offsets
+(:func:`chunk_occ_offsets`) continue the global occurrence index across
+chunks, so every item routes to the exact same expert instance as the
+unchunked dispatch and chunked output is bit-identical at zero-drop
+capacities (tests/test_stages.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import balancer as balancer_mod
+from repro.core.layout import physical_slot_of
+from repro.core.planner import token_targets
+from repro.moe.dispatch import (
+    bucket_by_slot,
+    combine_tokens,
+    dispatch_tokens,
+    unbucket,
+)
+from repro.moe.distribute import materialize_replica_stack
+from repro.moe.expert import grouped_ffn
+from repro.moe.gating import GateOut, gate
+from repro.moe.permute import (
+    fused_bucket,
+    fused_combine,
+    fused_dispatch,
+    fused_replicated_bucket,
+    fused_replicated_combine,
+    fused_unbucket,
+    two_hop_all_to_all,
+)
+from repro.moe.reference import swiglu
+
+__all__ = [
+    "MoEStats",
+    "StageCtx",
+    "GateState",
+    "PlanState",
+    "DistributeState",
+    "DispatchState",
+    "make_stage_ctx",
+    "gate_stage",
+    "plan_stage",
+    "distribute_stage",
+    "dispatch_stage",
+    "compute_stage",
+    "combine_stage",
+    "chunk_bounds",
+    "chunk_occ_offsets",
+    "run_staged_moe",
+]
+
+_I32 = jnp.int32
+
+
+class MoEStats(NamedTuple):
+    drops_dispatch: jax.Array   # () items dropped at pair-capacity
+    drops_slot: jax.Array       # () items dropped at slot-capacity
+    pre_max: jax.Array          # () pre-balance max rank load
+    post_max: jax.Array         # () post-balance max rank load
+    max_slot_load: jax.Array    # () busiest physical slot occupancy
+                                #    (max over overlap chunks when chunked)
+    counts: jax.Array           # (E,) local per-expert load
+    tier_tokens: jax.Array | None = None    # (3,) [local, intra, inter]
+    tier_replicas: jax.Array | None = None  # (2,) [intra, inter] (rack-aware)
+
+
+class StageCtx(NamedTuple):
+    """Validated static context shared by every stage (no array state)."""
+
+    cfg: Any                                # MoEConfig (duck-typed: no import
+                                            # of repro.moe.layer -> no cycle)
+    axis_name: str | tuple[str, str] | None
+    factored: bool
+    rack_axis: str | None
+    lane_axis: str | None
+
+
+class GateState(NamedTuple):
+    """GateStage output: routing decisions + the exact EP load matrix."""
+
+    gate_out: GateOut    # expert_ids/weights/counts/aux_loss for the full T
+    lam: jax.Array       # (R, E) exact per-rank per-expert load
+    my: jax.Array        # () this rank's EP index (rack-major when factored)
+
+
+class PlanState(NamedTuple):
+    """PlanStage output: the solved plan + replicated slot table."""
+
+    plan: Any            # repro.core.balancer Plan (replicated on all ranks)
+    slot_of_all: jax.Array   # (R, E) physical slot of e on r, -1 not hosted
+
+
+class DistributeState(NamedTuple):
+    """DistributeStage output: main + replica weights per physical slot."""
+
+    w1_all: jax.Array    # (num_slots, D, F)
+    w3_all: jax.Array    # (num_slots, D, F)
+    w2_all: jax.Array    # (num_slots, F, D)
+
+
+class DispatchState(NamedTuple):
+    """DispatchStage output for ONE overlap chunk.
+
+    ``xs``/``valid`` are the slot buffers ComputeStage consumes; ``inverse``
+    is the mode-specific state CombineStage needs to route FFN outputs back
+    (fused a2a: (FusedDispatch, BucketMeta); reference a2a: (DispatchOut,
+    back_idx); fused replicated: ReplicatedBucket; reference replicated:
+    back_idx).  Stages communicate ONLY through these fields -- the
+    stage-boundary lint rule (DESIGN.md S11) keeps the underlying engine
+    primitives from being called outside this module.
+    """
+
+    xs: jax.Array        # (num_slots, cap_slot, D) slot buffers
+    valid: jax.Array     # (num_slots, cap_slot) bool
+    inverse: Any         # mode-specific inverse-path state (see above)
+    drops_dispatch: jax.Array   # () pair-capacity drops this chunk
+    drops_slot: jax.Array       # () slot-capacity drops this chunk
+
+
+def make_stage_ctx(cfg, axis_name) -> StageCtx:
+    """Validate the (dispatch_mode, mesh axis) pairing once, up front."""
+    factored = isinstance(axis_name, (tuple, list))
+    rack_axis = lane_axis = None
+    if factored:
+        if len(axis_name) != 2:
+            raise ValueError(
+                f"factored axis_name must be (rack_axis, lane_axis), "
+                f"got {axis_name!r}")
+        if cfg.dispatch_mode == "a2a":
+            raise ValueError(
+                "dispatch_mode='a2a' runs on a flat EP axis; use "
+                "'hier_a2a' on a factored (rack, lane) mesh")
+        rack_axis, lane_axis = axis_name
+    elif cfg.dispatch_mode == "hier_a2a" and axis_name is not None:
+        raise ValueError(
+            "dispatch_mode='hier_a2a' needs a (rack_axis, lane_axis) "
+            "axis_name tuple (or None when ep_size == 1)")
+    return StageCtx(cfg=cfg, axis_name=axis_name, factored=factored,
+                    rack_axis=rack_axis, lane_axis=lane_axis)
+
+
+def _my_rank(ctx: StageCtx) -> jax.Array:
+    if ctx.factored:
+        return (jax.lax.axis_index(ctx.rack_axis) * ctx.cfg.ranks_per_rack
+                + jax.lax.axis_index(ctx.lane_axis)).astype(_I32)
+    if ctx.axis_name is not None:
+        return jax.lax.axis_index(ctx.axis_name).astype(_I32)
+    return jnp.asarray(0, _I32)
+
+
+def _exchange(ctx: StageCtx, buf: jax.Array, *,
+              reverse: bool = False) -> jax.Array:
+    """(R, ...) destination-major buffer through the EP fabric."""
+    if ctx.factored:
+        return two_hop_all_to_all(buf, racks=ctx.cfg.racks,
+                                  rack_axis=ctx.rack_axis,
+                                  lane_axis=ctx.lane_axis, reverse=reverse)
+    if ctx.axis_name is not None:
+        return jax.lax.all_to_all(buf, ctx.axis_name, 0, 0, tiled=False)
+    return buf
+
+
+# --------------------------------------------------------------------------
+# Per-microbatch stages (run once, shared by every overlap chunk)
+# --------------------------------------------------------------------------
+
+
+def gate_stage(ctx: StageCtx, x: jax.Array, router: jax.Array,
+               router_bias: jax.Array | None = None) -> GateState:
+    """Gate the full microbatch and gather the exact EP load matrix."""
+    cfg = ctx.cfg
+    R = cfg.ep_size
+    gate_out: GateOut = gate(x, router, cfg.gating, bias=router_bias)
+    if cfg.dispatch_mode == "replicated":
+        # Tokens are identical on every EP rank, so counts are already the
+        # EP-group totals -- no collective needed.  Attribute the load to the
+        # experts' home ranks (source locality is vacuous here).
+        home = cfg.layout.home()
+        lam = (jax.nn.one_hot(home, R, dtype=_I32)
+               * gate_out.counts[:, None]).T                        # (R, E)
+        my = _my_rank(ctx)
+    elif ctx.axis_name is not None:
+        if ctx.factored:
+            # Two-step gather mirrors the wire: lanes first, then racks,
+            # yielding rack-major (= global rank order) load rows.
+            lam = jax.lax.all_gather(gate_out.counts, ctx.lane_axis)
+            lam = jax.lax.all_gather(lam, ctx.rack_axis).reshape(R, -1)
+        else:
+            lam = jax.lax.all_gather(gate_out.counts, ctx.axis_name)
+        my = _my_rank(ctx)
+    else:
+        if R != 1:
+            raise ValueError("axis_name=None requires ep_size == 1")
+        lam = gate_out.counts[None]
+        my = jnp.asarray(0, _I32)
+    return GateState(gate_out=gate_out, lam=lam, my=my)
+
+
+def plan_stage(ctx: StageCtx, gs: GateState, *,
+               lam_e_est: jax.Array | None = None) -> PlanState:
+    """Solve the balancer on the FULL-batch load (once per microbatch)."""
+    cfg = ctx.cfg
+    layout = cfg.layout
+    plan = balancer_mod.solve(gs.lam, layout.home(), cfg.balancer,
+                              lam_e_est=lam_e_est, rack_size=cfg.rack_size)
+    return PlanState(plan=plan, slot_of_all=physical_slot_of(layout, plan.x))
+
+
+def distribute_stage(ctx: StageCtx, params, gs: GateState,
+                     ps: PlanState) -> DistributeState:
+    """Stream replica weights: ONE stacked transfer for w1/w3/w2."""
+    cfg = ctx.cfg
+    w1r, w3r, w2r = materialize_replica_stack(
+        (params.w1, params.w3, params.w2), ps.plan.x, gs.my, ctx.axis_name,
+        n_chunks=cfg.distribute_chunks, racks=cfg.racks)
+    return DistributeState(
+        w1_all=jnp.concatenate([params.w1, w1r], axis=0),
+        w3_all=jnp.concatenate([params.w3, w3r], axis=0),
+        w2_all=jnp.concatenate([params.w2, w2r], axis=0))
+
+
+# --------------------------------------------------------------------------
+# Per-chunk stages
+# --------------------------------------------------------------------------
+
+
+def dispatch_stage(ctx: StageCtx, x_chunk: jax.Array,
+                   expert_ids: jax.Array, gs: GateState, ps: PlanState, *,
+                   occ_offset: jax.Array | None = None) -> DispatchState:
+    """Reroute one token chunk into this rank's slot buffers.
+
+    Issues the chunk's forward wire (flat or two-hop all_to_all) -- under
+    overlap the driver calls this for chunk *i+1* before ComputeStage runs
+    on chunk *i*, which is the seam the pipelining lives on.
+    """
+    cfg = ctx.cfg
+    layout = cfg.layout
+    num_slots = layout.experts_per_rank + layout.n_slot
+    zero = jnp.zeros((), _I32)
+
+    if cfg.dispatch_mode == "replicated":
+        # Tokens identical on every EP rank (decode / exact-reference path):
+        # item j of expert e is owned by the instance whose cumulative quota
+        # covers j; this rank computes its share, outputs are psum-merged.
+        slot_of = ps.slot_of_all[gs.my]
+        if cfg.dispatch_impl == "fused":
+            rb = fused_replicated_bucket(
+                x_chunk, expert_ids, ps.plan.cum_u, gs.my, slot_of,
+                num_slots=num_slots, cap_slot=cfg.cap_slot,
+                occ_offset=occ_offset,
+            )
+            return DispatchState(xs=rb.xs, valid=rb.valid, inverse=rb,
+                                 drops_dispatch=zero, drops_slot=rb.drops)
+        items_e = expert_ids.reshape(-1)
+        # (Tc*k,): u is the one-source split.
+        owner = token_targets(items_e, ps.plan.u)
+        mine = owner == gs.my
+        recv_e = jnp.where(mine, items_e, -1)[None, :]       # (1, Tc*k)
+        recv_x = jnp.repeat(x_chunk, cfg.gating.top_k, axis=0)[None, :, :]
+        xs, valid, back_idx, slot_drops = bucket_by_slot(
+            recv_x, recv_e, slot_of, num_slots=num_slots,
+            cap_slot=cfg.cap_slot
+        )
+        return DispatchState(xs=xs, valid=valid, inverse=back_idx,
+                             drops_dispatch=zero, drops_slot=slot_drops)
+
+    if cfg.dispatch_impl == "fused":
+        # Single-sort permutation engine (repro.moe.permute): on a factored
+        # mesh the same destination-major buffers ride the two-hop tiered
+        # exchange; the count metadata rides both hops unchanged.
+        disp = fused_dispatch(
+            x_chunk, expert_ids, ps.plan.cum_q[gs.my], ps.slot_of_all,
+            num_slots=num_slots, cap_pair=cfg.cap_pair, occ_offset=occ_offset,
+        )
+        recv_x = _exchange(ctx, disp.send_x)
+        recv_c = _exchange(ctx, disp.send_counts)
+        xs, valid, meta, slot_drops = fused_bucket(
+            recv_x, recv_c, num_slots=num_slots, cap_slot=cfg.cap_slot
+        )
+        return DispatchState(xs=xs, valid=valid, inverse=(disp, meta),
+                             drops_dispatch=disp.drops, drops_slot=slot_drops)
+
+    # Reference multi-sort scatter path (the equivalence oracle; unchunked).
+    q_row = ps.plan.q[gs.my]                               # (E, R)
+    disp = dispatch_tokens(x_chunk, expert_ids, q_row, cap_pair=cfg.cap_pair)
+    if ctx.axis_name is not None:
+        recv_x = jax.lax.all_to_all(disp.send_x, ctx.axis_name, 0, 0,
+                                    tiled=False)
+        recv_e = jax.lax.all_to_all(disp.send_e, ctx.axis_name, 0, 0,
+                                    tiled=False)
+    else:
+        recv_x, recv_e = disp.send_x, disp.send_e
+    slot_of = ps.slot_of_all[gs.my]                        # (E,)
+    xs, valid, back_idx, slot_drops = bucket_by_slot(
+        recv_x, recv_e, slot_of, num_slots=num_slots, cap_slot=cfg.cap_slot
+    )
+    return DispatchState(xs=xs, valid=valid, inverse=(disp, back_idx),
+                         drops_dispatch=disp.drops, drops_slot=slot_drops)
+
+
+def compute_stage(ctx: StageCtx, ds: DispatchState,
+                  dist: DistributeState) -> jax.Array:
+    """Grouped FFN over this rank's physical slots for one chunk."""
+    return grouped_ffn(ds.xs, ds.valid, dist.w1_all, dist.w3_all,
+                       dist.w2_all, use_kernel=ctx.cfg.use_kernel)
+
+
+def combine_stage(ctx: StageCtx, ds: DispatchState, out: jax.Array,
+                  weights: jax.Array) -> jax.Array:
+    """Route FFN outputs back and reduce each token's k contributions.
+
+    ``weights`` is the (T_chunk, k) gate-weight slice of this chunk; the
+    return is the chunk's (T_chunk, D) combined output (pre-psum for the
+    replicated mode -- the driver merges ranks once over the whole batch).
+    """
+    cfg = ctx.cfg
+    D = out.shape[-1]
+    if cfg.dispatch_mode == "replicated":
+        if cfg.dispatch_impl == "fused":
+            return fused_replicated_combine(out, ds.inverse, weights)
+        Tc, k = weights.shape
+        ret = unbucket(out, ds.valid, ds.inverse, (1, Tc * k, D))
+        flat_w = weights.reshape(-1)
+        items_t = jnp.repeat(jnp.arange(Tc, dtype=_I32), k)
+        vals = ret[0] * flat_w[:, None].astype(ret.dtype)
+        return jnp.zeros((Tc, D), ret.dtype).at[items_t].add(vals)
+    if cfg.dispatch_impl == "fused":
+        disp, meta = ds.inverse
+        ret = _exchange(ctx, fused_unbucket(out, meta), reverse=True)
+        return fused_combine(ret, disp, weights)
+    disp, back_idx = ds.inverse
+    ret = unbucket(out, ds.valid, back_idx, (cfg.ep_size, cfg.cap_pair, D))
+    if ctx.axis_name is not None:
+        ret = jax.lax.all_to_all(ret, ctx.axis_name, 0, 0, tiled=False)
+    return combine_tokens(ret, disp, weights, weights.shape[0])
+
+
+# --------------------------------------------------------------------------
+# Chunking helpers
+# --------------------------------------------------------------------------
+
+
+def chunk_bounds(total: int, *, n_chunks: int | None = None,
+                 chunk_size: int | None = None) -> list[tuple[int, int]]:
+    """(start, length) spans covering ``[0, total)``, in order.
+
+    Exactly one of ``n_chunks`` (equal split; must divide ``total``) or
+    ``chunk_size`` (fixed-size spans, ragged tail allowed) must be given.
+    Shared by the overlap driver (equal chunks of the microbatch) and the
+    serving engine's chunked prefill (fixed chunk, ragged last span).
+    """
+    if (n_chunks is None) == (chunk_size is None):
+        raise ValueError("pass exactly one of n_chunks / chunk_size")
+    if n_chunks is not None:
+        if n_chunks < 1 or total % n_chunks != 0:
+            raise ValueError(
+                f"n_chunks={n_chunks} must be >= 1 and divide total={total}")
+        size = total // n_chunks
+        return [(i * size, size) for i in range(n_chunks)]
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size={chunk_size} must be >= 1")
+    return [(s, min(chunk_size, total - s)) for s in range(0, total, chunk_size)]
+
+
+def chunk_occ_offsets(expert_ids: jax.Array, n_chunks: int,
+                      num_experts: int) -> jax.Array:
+    """(C, E) per-chunk occurrence offsets continuing the global index.
+
+    Chunk c's offset for expert e is the number of e-items in chunks < c
+    (exclusive cumsum of per-chunk expert histograms).  Adding it to each
+    chunk's local occurrence index makes ``occ`` globally consistent with
+    the unchunked dispatch, so every item hits the exact same expert
+    instance under the shared quota tables -- the mechanism behind chunked
+    == unchunked bit-identity (module docstring).
+    """
+    ec = expert_ids.reshape(n_chunks, -1).astype(_I32)       # (C, Tc*k)
+    oh = ec[:, :, None] == jnp.arange(num_experts, dtype=_I32)[None, None, :]
+    hist = oh.astype(_I32).sum(axis=1)                       # (C, E)
+    return jnp.cumsum(hist, axis=0) - hist                   # exclusive
+
+
+# --------------------------------------------------------------------------
+# Driver
+# --------------------------------------------------------------------------
+
+
+def run_staged_moe(
+    x: jax.Array,
+    params,
+    cfg,
+    *,
+    axis_name: str | tuple[str, str] | None,
+    router_bias: jax.Array | None = None,
+    lam_e_est: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array, MoEStats]:
+    """One balanced MoE layer as a staged, optionally chunk-overlapped run.
+
+    gate -> plan -> distribute execute once on the full microbatch; the
+    dispatch -> compute -> combine tail runs per overlap chunk, software-
+    pipelined so chunk i+1's dispatch (and its all_to_all) is issued before
+    chunk i's FFN + combine -- under XLA's latency-hiding scheduler the
+    wire of the next chunk overlaps the compute of the current one.
+    """
+    T, D = x.shape
+    ctx = make_stage_ctx(cfg, axis_name)
+    gs = gate_stage(ctx, x, params.router, router_bias)
+    ps = plan_stage(ctx, gs, lam_e_est=lam_e_est)
+    dist = distribute_stage(ctx, params, gs, ps)
+
+    C = cfg.overlap_chunks
+    if T % C != 0:
+        raise ValueError(
+            f"overlap_chunks={C} must divide the local token count T={T}")
+    bounds = chunk_bounds(T, n_chunks=C)
+    offsets = (chunk_occ_offsets(gs.gate_out.expert_ids, C,
+                                 cfg.gating.num_experts) if C > 1 else None)
+
+    def disp(i: int) -> DispatchState:
+        s, ln = bounds[i]
+        off = offsets[i] if offsets is not None else None
+        return dispatch_stage(ctx, x[s:s + ln],
+                              gs.gate_out.expert_ids[s:s + ln], gs, ps,
+                              occ_offset=off)
+
+    ys = []
+    drops_dispatch = jnp.zeros((), _I32)
+    drops_slot = jnp.zeros((), _I32)
+    max_slot_load = jnp.zeros((), _I32)
+    d_next = disp(0)
+    for i in range(C):
+        # Double-buffer: issue chunk i+1's dispatch before consuming chunk
+        # i's buffers, then retire chunk i with FFN + combine.
+        d_cur, d_next = d_next, (disp(i + 1) if i + 1 < C else None)
+        out = compute_stage(ctx, d_cur, dist)
+        s, ln = bounds[i]
+        ys.append(combine_stage(ctx, d_cur, out,
+                                gs.gate_out.weights[s:s + ln]))
+        drops_dispatch = drops_dispatch + d_cur.drops_dispatch
+        drops_slot = drops_slot + d_cur.drops_slot
+        max_slot_load = jnp.maximum(
+            max_slot_load, d_cur.valid.sum(axis=1).max().astype(_I32))
+    y = ys[0] if C == 1 else jnp.concatenate(ys, axis=0)
+
+    if cfg.dispatch_mode == "replicated":
+        # One rank-merge over the whole batch: psum is elementwise, so the
+        # merged concat equals the concat of per-chunk merges bitwise.
+        if ctx.factored:
+            y = jax.lax.psum(jax.lax.psum(y, ctx.lane_axis), ctx.rack_axis)
+        elif ctx.axis_name is not None:
+            y = jax.lax.psum(y, ctx.axis_name)
+
+    if cfg.n_shared_experts > 0:
+        y = y + swiglu(x, params.shared_w1, params.shared_w3, params.shared_w2)
+
+    stats = MoEStats(
+        drops_dispatch=drops_dispatch,
+        drops_slot=drops_slot,
+        pre_max=ps.plan.pre_max,
+        post_max=ps.plan.post_max,
+        max_slot_load=max_slot_load,
+        counts=gs.gate_out.counts,
+        tier_tokens=ps.plan.tier_tokens,
+        tier_replicas=ps.plan.tier_replicas,
+    )
+    return y.astype(x.dtype), gs.gate_out.aux_loss, stats

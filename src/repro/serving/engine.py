@@ -21,6 +21,8 @@ from typing import Callable
 import jax.numpy as jnp
 import numpy as np
 
+from repro.moe.stages import chunk_bounds
+
 __all__ = ["EngineConfig", "Request", "ServingEngine"]
 
 
@@ -88,18 +90,17 @@ class ServingEngine:
                 if self.now < req.arrival:
                     self.now = req.arrival
                 cache = self.new_cache_fn(1)
-                pos = 0
-                L = len(req.prompt)
                 last_logits = None
-                while pos < L:
-                    chunk = req.prompt[pos: pos + self.cfg.chunk_size]
-                    pad = self.cfg.chunk_size - len(chunk)
+                # Same chunking helper as the MoE overlap driver
+                # (repro.moe.stages): fixed-size spans, ragged tail.
+                for pos, length in chunk_bounds(
+                        len(req.prompt), chunk_size=self.cfg.chunk_size):
+                    chunk = req.prompt[pos: pos + length]
+                    pad = self.cfg.chunk_size - length
                     toks = np.pad(chunk, (0, pad))[None, :]
-                    t0 = self.now
                     last_logits, cache = self.prefill_fn(
-                        jnp.asarray(toks, jnp.int32), cache, pos, len(chunk))
+                        jnp.asarray(toks, jnp.int32), cache, pos, length)
                     self._advance(self.clock_fn() if self.clock_fn else 0.0)
-                    pos += len(chunk)
                 req.first_token_at = self.now
                 # Host-side scheduling layer (module docstring): reading
                 # results back is the point, never under jit.

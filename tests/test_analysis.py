@@ -447,6 +447,88 @@ class TestLint:
         vio = lint_paths([src_dir])
         assert vio == [], "\n".join(map(str, vio))
 
+    def test_stage_boundary_primitive_flagged(self):
+        """Engine primitives called outside the moe stage modules break the
+        typed stage contract (DESIGN.md S11) and are flagged."""
+        bad = ("from repro.moe.permute import fused_dispatch\n"
+               "def f(x, ids, cq, so):\n"
+               "    return fused_dispatch(x, ids, cq, so, num_slots=2,"
+               " cap_pair=8)\n")
+        assert _rules(bad) == {"stage-boundary"}
+        dotted = ("from repro.moe import permute\n"
+                  "def f(x, ids, cq, so):\n"
+                  "    return permute.fused_dispatch(x, ids, cq, so,"
+                  " num_slots=2, cap_pair=8)\n")
+        assert _rules(dotted) == {"stage-boundary"}
+
+    def test_stage_boundary_exempt_in_moe_engine_modules(self):
+        src = ("from repro.moe.permute import fused_dispatch\n"
+               "def f(x, ids, cq, so):\n"
+               "    return fused_dispatch(x, ids, cq, so, num_slots=2,"
+               " cap_pair=8)\n")
+        for stem in ("stages", "permute", "distribute", "dispatch", "expert"):
+            assert _rules(src, f"src/repro/moe/{stem}.py") == set(), stem
+        # Only the moe package is exempt, and only the engine stems.
+        assert _rules(src, "src/repro/moe/layer.py") == {"stage-boundary"}
+        assert _rules(src, "src/repro/core/stages.py") == {"stage-boundary"}
+
+    def test_stage_boundary_suppression(self):
+        src = ("from repro.moe.distribute import materialize_replicas\n"
+               "def f(w, xs, r):\n"
+               "    return materialize_replicas(w, xs, r, 'model')"
+               "  # uep-lint: disable=stage-boundary\n")
+        assert _rules(src) == set()
+
+
+# ======================================================================
+# Overlap chunking verifier (DESIGN.md S11)
+# ======================================================================
+
+def _chunk_split(rng, lam, C):
+    """Random per-item chunk assignment: multinomial split of each (r, e)."""
+    parts = rng.multinomial(lam.reshape(-1), np.full(C, 1.0 / C))
+    return parts.T.reshape((C,) + lam.shape)
+
+
+@pytest.mark.parametrize("mode", ["ultraep", "eplb_plus"])
+def test_verify_chunking_green_on_solver_output(mode, rng):
+    """Any chunk split of the solved load fits the plan's own zero-drop
+    capacities: per-chunk traffic is a subset of the unchunked traffic."""
+    lam = _skewed_lam(rng, 4, 16)
+    plan, _ = _solve(mode, lam)
+    q = np.asarray(plan.q)
+    cap_pair = int(q.sum(axis=1).max())
+    cap_slot = int(np.asarray(plan.u).max())
+    for C in (2, 4):
+        chunk_lam = _chunk_split(rng, lam, C)
+        vio = plan_check.verify_chunking(plan, chunk_lam, cap_pair=cap_pair,
+                                         cap_slot=cap_slot)
+        assert not errors(vio), "\n".join(map(str, vio))
+
+
+def test_verify_chunking_detects_lost_item(valid_plan):
+    plan, lam, _ = valid_plan
+    chunk_lam = _chunk_split(np.random.default_rng(0), lam, 2)
+    r, e = np.argwhere(chunk_lam[0] > 0)[0]
+    chunk_lam[0, r, e] -= 1            # one item vanishes from chunk 0
+    vio = plan_check.verify_chunking(plan, chunk_lam)
+    assert any(v.rule == "chunk-conservation" for v in errors(vio))
+
+
+def test_verify_chunking_detects_starved_capacity(valid_plan):
+    """cap_pair=1 cannot carry any real chunk's pair traffic: the verifier
+    localises the overflow instead of letting the driver drop tokens."""
+    plan, lam, _ = valid_plan
+    chunk_lam = _chunk_split(np.random.default_rng(0), lam, 2)
+    vio = plan_check.verify_chunking(plan, chunk_lam, cap_pair=1, cap_slot=1)
+    assert any(v.rule == "chunk-capacity" for v in errors(vio))
+
+
+def test_verify_chunking_rejects_bad_shape(valid_plan):
+    plan, lam, _ = valid_plan
+    vio = plan_check.verify_chunking(plan, np.zeros((2, 3)))
+    assert any(v.rule == "shape" for v in vio)
+
 
 # ======================================================================
 # eval_shape dry-trace of the MoE dispatch paths
@@ -485,6 +567,28 @@ def test_eval_shape_moe_layer(shape, impl):
     assert aux.shape == ()
     assert stats.drops_dispatch.dtype == jnp.int32
     assert stats.counts.shape == (E,)
+
+
+def test_eval_shape_staged_overlap_driver():
+    """The chunked overlap driver (gate/plan/distribute once, dispatch ->
+    FFN -> combine per chunk, concat) traces abstractly at production size:
+    static shapes per chunk, stats reduced across chunks."""
+    import dataclasses
+
+    from repro.moe.layer import init_moe_params, moe_layer_local
+
+    E, D, F, T = 64, 512, 1024, 2048
+    cfg = _moe_cfg(E, D, F, T)
+    cfg = dataclasses.replace(cfg, overlap_chunks=4)
+    params = jax.eval_shape(
+        lambda k: init_moe_params(k, cfg), jax.random.PRNGKey(0))
+    x = jax.ShapeDtypeStruct((T, D), jnp.float32)
+    y, aux, stats = jax.eval_shape(
+        lambda xx, pp: moe_layer_local(xx, pp, cfg, axis_name=None),
+        x, params)
+    assert y.shape == (T, D) and y.dtype == jnp.float32
+    assert aux.shape == ()
+    assert stats.drops_dispatch.shape == () and stats.max_slot_load.shape == ()
 
 
 def test_eval_shape_fused_dispatch_multirank():

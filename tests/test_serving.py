@@ -44,6 +44,38 @@ def test_engine_end_to_end(arch):
     assert (eng.tpot() > 0).all()
 
 
+def test_engine_overlap_chunks_identical_outputs():
+    """MoE overlap chunking inside chunked prefill (overlap_chunks=2 over
+    the 16-token prefill chunk) must not change a single sampled token:
+    the staged driver is bit-identical at the engine's capacities."""
+    cfg = get_config("tiny-moe")
+    outs = {}
+    for overlap in (1, 2):
+        rcfg = RuntimeConfig(balancer=BalancerConfig(mode="ultraep",
+                                                     n_slot=2),
+                             cf_pair=8, cf_slot=8, remat=False,
+                             overlap_chunks=overlap)
+        pctx = ParallelCtx(mesh=None)
+        params = init_lm(jax.random.PRNGKey(0), cfg, rcfg, pctx)
+        prefill, decode, new_cache, stack, unstack = make_engine_fns(
+            params, cfg, rcfg, pctx, max_seq=128)
+        eng = ServingEngine(EngineConfig(chunk_size=16, decode_batch=2,
+                                         max_seq=128),
+                            prefill_fn=prefill, decode_fn=decode,
+                            new_cache_fn=new_cache, stack_caches=stack,
+                            unstack_caches=unstack)
+        rng = np.random.default_rng(7)
+        for i in range(3):
+            eng.submit(Request(
+                rid=i,
+                prompt=rng.integers(0, cfg.vocab_size, size=24)
+                .astype(np.int32),
+                max_new_tokens=4))
+        outs[overlap] = [r.output for r in sorted(eng.run(),
+                                                  key=lambda r: r.rid)]
+    assert outs[1] == outs[2]
+
+
 def test_engine_prefill_decode_greedy_consistency():
     """Greedy continuation via the engine == greedy continuation via
     sequential full forwards."""

@@ -9,7 +9,10 @@ violation.  Warn-severity findings (e.g. the EPLB baselines' documented
 topology-blind reroute) are printed but do not fail the sweep.
 
 Run locally with ``python tools/verify_plans.py``; CI runs it in the
-lint-and-verify job.  ``--seeds N`` widens the sweep.
+lint-and-verify job.  ``--seeds N`` widens the sweep; ``--chunks 2,4``
+additionally splits each load into overlap chunks and verifies the staged
+driver's per-chunk buffer invariants
+(:func:`repro.analysis.plan_check.verify_chunking`).
 """
 
 from __future__ import annotations
@@ -52,8 +55,13 @@ def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--seeds", type=int, default=2,
                     help="random seeds per (grid, skew, mode) cell")
+    ap.add_argument("--chunks", type=str, default="",
+                    help="comma-separated overlap chunk counts; each plan is "
+                         "additionally checked with verify_chunking against "
+                         "its own zero-drop capacities (e.g. '2,4')")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
+    chunk_list = [int(c) for c in args.chunks.split(",") if c.strip()]
 
     import jax
     jax.config.update("jax_platforms", "cpu")
@@ -93,6 +101,22 @@ def main(argv: list[str] | None = None) -> int:
                     vio += sched_check.verify_schedule(
                         sched, home=np.asarray(home), hosted=hosted,
                         topology=topo)
+
+                    # Overlap chunking: split the load into C random chunks
+                    # and check the per-chunk routing conserves tokens and
+                    # fits the plan's own zero-drop capacities (per-chunk
+                    # traffic must be a subset of the unchunked traffic).
+                    q_np = np.asarray(plan.q)
+                    cap_pair = int(q_np.sum(axis=1).max())
+                    cap_slot = int(np.asarray(plan.u).max())
+                    for C in chunk_list:
+                        flat = np.asarray(lam).reshape(-1)
+                        parts = rng.multinomial(
+                            flat, np.full(C, 1.0) / C)        # (R*E, C)
+                        chunk_lam = parts.T.reshape(C, R, E)
+                        vio += plan_check.verify_chunking(
+                            plan, chunk_lam, cap_pair=cap_pair,
+                            cap_slot=cap_slot)
 
                     n_cells += 1
                     cell = (f"E={E} R={R} rack={rack_size} skew={skew} "
