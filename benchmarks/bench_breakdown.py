@@ -177,11 +177,27 @@ def run(quiet=False, E=64, k=4, D=64, F=128, T=2048, mode="ultraep"):
         t_fwd_ov[C] = _time(jax.jit(lambda x, c=cfg_ov: moe_layer_local(
             x, params, c, axis_name=None)[0]), x)
 
+    # Quantized wire + w8a8 compute (DESIGN.md S12): single-rank, so the
+    # wire columns measure the codec cost alone (encode/decode, no fabric to
+    # save bytes on); the ffn column includes the on-the-fly weight
+    # quantization of the int8 grouped SwiGLU.
+    t_ffn_q8 = _time(jax.jit(lambda xs, v: grouped_ffn(
+        xs, v, w1, w3, w2, ffn_dtype="int8")), xs, valid)
+    t_fwd_q = {}
+    for wire, ffn in (("int8", "none"), ("int8", "int8")):
+        cfg_q = dataclasses.replace(cfg, wire_dtype=wire, ffn_dtype=ffn)
+        t_fwd_q[(wire, ffn)] = _time(jax.jit(
+            lambda x, c=cfg_q: moe_layer_local(x, params, c,
+                                               axis_name=None)[0]), x)
+
     rows = dict(gate_ms=t_gate, solve_ms=t_solve, dispatch_ms=t_disp,
                 grouped_ffn_ms=t_ffn, full_fwd_ms=t_fwd,
+                grouped_ffn_q8_ms=t_ffn_q8,
                 full_fwd_overlap2_ms=t_fwd_ov[2],
                 full_fwd_overlap4_ms=t_fwd_ov[4],
                 overlap_speedup=t_fwd / t_fwd_ov[2],
+                full_fwd_wire_int8_ms=t_fwd_q[("int8", "none")],
+                full_fwd_w8a8_ms=t_fwd_q[("int8", "int8")],
                 full_bwd_ms=t_bwd,
                 solve_frac=t_solve / t_fwd)
     rows.update(permutation_pipelines(quiet=quiet, E=E, k=k, D=D, F=F, T=T,

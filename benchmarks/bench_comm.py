@@ -14,6 +14,12 @@ of intra/inter-rack bandwidth ratios it compares the flat load-aware relay
 against the rack-aware relay (one inter-rack copy per (expert, rack), leaves
 fanned out on the scale-up fabric) plus the rack-aware planner's per-tier
 token volumes -- the paper's Fig. 16-style trajectory on a two-level fabric.
+
+``sweep_wire`` prices the wire codec (DESIGN.md S12): for each
+``wire_dtype`` it re-runs the rack-aware case with quantized expert-stream
+payloads (``expert_wire_bytes``) and quantized per-tier token volumes
+(``tier_wire_bytes``), reporting total modeled inter-rack bytes and their
+drop vs the fp32 wire.
 """
 
 from __future__ import annotations
@@ -22,11 +28,14 @@ import numpy as np
 
 from repro.core import planner as pl
 from repro.core import ref_planner as ref
-from repro.core.comm_plan import build_relay_schedule, simulate
+from repro.core.comm_plan import build_relay_schedule, simulate, tier_wire_bytes
+from repro.core.quantize import expert_wire_bytes
 from repro.core.topology import Topology
 
 LINK_BW = 100e9          # per-rank scale-up link (model constant)
 EXPERT_BYTES = 44 << 20  # qwen3-235b expert bf16 (3 x 4096 x 1536 x 2B)
+D_MODEL = 4096           # token-payload width for the wire-byte accounting
+D_FF = 1536
 
 
 def _schedules(lam, home, n_slot, u_min=8):
@@ -66,7 +75,7 @@ def one_case(alpha: float, R=64, E=128, n_slot=2, seed=0):
 
 
 def one_tiered_case(ratio: float, R=64, lanes=8, E=128, n_slot=2, seed=0,
-                    alpha=1.2):
+                    alpha=1.2, wire_dtype="none"):
     """Flat vs rack-aware relay under an intra/inter bandwidth ratio."""
     rng = np.random.default_rng(seed)
     import jax.numpy as jnp
@@ -99,8 +108,10 @@ def one_tiered_case(ratio: float, R=64, lanes=8, E=128, n_slot=2, seed=0,
 
     tok_flat = np.array(pl.token_tier_volumes(p_flat.q, lanes))
     tok_rack = np.array(p_rack.tier_tokens)
+    tok_bytes = tier_wire_bytes(tok_rack, D_MODEL, wire_dtype)
     return dict(
         bw_ratio=ratio,
+        wire_dtype=wire_dtype,
         flat_relay_ms=t_flat * 1e3,
         rack_relay_ms=t_rack * 1e3,
         relay_gain=t_flat / max(t_rack, 1e-12),
@@ -110,7 +121,68 @@ def one_tiered_case(ratio: float, R=64, lanes=8, E=128, n_slot=2, seed=0,
         rack_last_inter_ms=s_rack.last_inter * 1e3,
         tok_inter_frac_flat=float(tok_flat[2] / max(tok_flat.sum(), 1)),
         tok_inter_frac_rack=float(tok_rack[2] / max(tok_rack.sum(), 1)),
+        tok_inter_gb_rack=float(tok_bytes[2] / 1e9),
     )
+
+
+def one_wire_case(wire_dtype: str, ratio=4.0, R=64, lanes=8, E=128, n_slot=2,
+                  seed=0, alpha=1.2):
+    """Rack-aware distribution + token wire priced at one wire dtype.
+
+    Expert-stream payloads use ``expert_wire_bytes`` (fp32 base, so the
+    "none" row is the fp32 baseline the drop ratios are measured against);
+    token volumes are the rack-aware plan's per-tier counts priced by
+    ``tier_wire_bytes``.  ``inter_gb_total`` sums both inter-rack byte
+    streams -- the scarce-fabric figure the quantized wire shrinks.
+    """
+    rng = np.random.default_rng(seed)
+    import jax.numpy as jnp
+
+    racks = R // lanes
+    topo = Topology(racks=racks, ranks_per_rack=lanes,
+                    intra_beta=LINK_BW, inter_beta=LINK_BW / ratio,
+                    intra_alpha=2e-6, inter_alpha=20e-6)
+    lam = (rng.pareto(alpha, size=(R, E)) * 40).astype(np.int64)
+    home = np.repeat(np.arange(R), E // R)
+    p_rack = pl.solve_plan(jnp.asarray(lam), jnp.asarray(home),
+                           n_slot=n_slot, u_min=8, rack_size=lanes)
+    hosted = np.array(p_rack.u > 0)
+    hosted[np.arange(E), home] = True
+
+    ebytes = expert_wire_bytes(D_MODEL, D_FF, wire_dtype)
+    sched = build_relay_schedule(hosted, home, ebytes, topology=topo)
+    t, s = simulate(sched, num_ranks=R, link_bandwidth=LINK_BW,
+                    topology=topo, return_stats=True)
+    tok_bytes = tier_wire_bytes(np.array(p_rack.tier_tokens), D_MODEL,
+                                wire_dtype)
+    return dict(
+        wire_dtype=wire_dtype,
+        bw_ratio=ratio,
+        expert_bytes_each=int(ebytes),
+        rack_relay_ms=t * 1e3,
+        stream_inter_gb=s.inter_bytes / 1e9,
+        tok_inter_gb=float(tok_bytes[2] / 1e9),
+        tok_intra_gb=float(tok_bytes[1] / 1e9),
+        inter_gb_total=float(s.inter_bytes / 1e9 + tok_bytes[2] / 1e9),
+    )
+
+
+def sweep_wire(wire_dtypes=("none", "bf16", "int8"), quiet=False, **kw):
+    """Inter-rack byte (and latency) drop per wire dtype vs the fp32 wire."""
+    rows = [one_wire_case(w, **kw) for w in wire_dtypes]
+    base = next(r for r in rows if r["wire_dtype"] == "none")
+    for r in rows:
+        r["inter_drop_vs_fp32"] = (base["inter_gb_total"]
+                                   / max(r["inter_gb_total"], 1e-12))
+    if not quiet:
+        print("\n== Fig. 16c: wire-dtype inter-rack bytes (rack-aware) ==")
+        print(f"{'wire':>6s} {'relay ms':>9s} {'stream GB':>10s} "
+              f"{'tok GB':>8s} {'total GB':>9s} {'drop':>6s}")
+        for r in rows:
+            print(f"{r['wire_dtype']:>6s} {r['rack_relay_ms']:9.2f} "
+                  f"{r['stream_inter_gb']:10.3f} {r['tok_inter_gb']:8.3f} "
+                  f"{r['inter_gb_total']:9.3f} {r['inter_drop_vs_fp32']:5.2f}x")
+    return rows
 
 
 def sweep_tiered(ratios=(1.0, 2.0, 4.0, 8.0), quiet=False, **kw):
@@ -144,3 +216,4 @@ def run(quiet=False):
 if __name__ == "__main__":
     run()
     sweep_tiered()
+    sweep_wire()

@@ -52,10 +52,19 @@ def main() -> None:
                 f"{worst_t['tok_inter_frac_flat']:.3f}", "ratio"))
     csv.append(("comm.tok_inter_frac.rack",
                 f"{worst_t['tok_inter_frac_rack']:.3f}", "ratio"))
+
+    # -- Fig. 16c: wire-dtype byte sweep ---------------------------------
+    wire = bench_comm.sweep_wire()
+    by_dtype = {r["wire_dtype"]: r for r in wire}
+    csv.append(("comm.wire_inter_drop.int8",
+                f"{by_dtype['int8']['inter_drop_vs_fp32']:.2f}", "x"))
+    csv.append(("comm.wire_inter_drop.bf16",
+                f"{by_dtype['bf16']['inter_drop_vs_fp32']:.2f}", "x"))
     comm_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                              os.pardir, "BENCH_comm.json")
     with open(os.path.abspath(comm_path), "w") as f:
-        json.dump({"fig16_flat": comm, "fig16b_tiered_sweep": tiered},
+        json.dump({"fig16_flat": comm, "fig16b_tiered_sweep": tiered,
+                   "fig16c_wire_dtype_sweep": wire},
                   f, indent=2, default=float)
         f.write("\n")
 

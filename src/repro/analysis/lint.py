@@ -36,6 +36,16 @@ with ``# uep-lint: skip-file`` in its first ten lines):
                          typed stage outputs of :mod:`repro.moe.stages`
                          (DESIGN.md S11) -- ad-hoc cross-stage plumbing is
                          how the pre-refactor layer monolith grew.
+* ``wire-dtype``      -- no ``.astype(int8 | bfloat16)`` on buffers inside
+                         the ``moe/`` engine modules: wire-dtype conversion
+                         belongs exclusively to the
+                         :mod:`repro.core.quantize` codec helpers
+                         (``encode_wire``/``decode_wire``/``encode_int8``).
+                         An ad-hoc cast next to an already-encoded payload
+                         silently double-quantizes (or strips the in-band
+                         scales) and no test that compares at tolerance
+                         will catch the extra half-step of error
+                         (DESIGN.md S12).
 
 Functions are considered *traced* when their bodies reference ``jnp`` /
 ``jax.lax`` / ``jax.nn`` -- a deliberate over-approximation: host-side numpy
@@ -70,7 +80,7 @@ class LintViolation:
 
 
 RULES = ("axis-name", "host-sync", "float64-literal", "rack-loop",
-         "stage-boundary")
+         "stage-boundary", "wire-dtype")
 
 # Canonical mesh-axis vocabulary: ParallelCtx defaults (batch_axes=("data",),
 # model_axis="model") plus the documented factored/mesh extras ("pod" FSDP
@@ -100,6 +110,12 @@ _SKIP_FILE_RE = re.compile(r"#\s*uep-lint:\s*skip-file")
 
 # float64-literal applies only where kernel/moe code lives.
 _F64_PATH_PARTS = ("kernels", "moe")
+
+# wire-dtype applies to the MoE engine modules (payload buffers live there);
+# repro.core.quantize is outside this scope by construction, so the codec
+# helpers themselves are exempt.
+_WIRE_PATH_PARTS = ("moe",)
+_WIRE_DTYPES_FLAGGED = ("int8", "bfloat16")
 
 # stage-boundary: engine primitives whose call sites are confined to the
 # staged execution layer and the engine modules themselves.  Keep in sync
@@ -201,10 +217,26 @@ def _is_f64(node: ast.AST) -> bool:
     return (isinstance(node, ast.Constant) and node.value == "float64")
 
 
+def _wire_dtype_cast(call: ast.Call) -> str | None:
+    """The flagged dtype name when ``call`` is ``.astype(int8|bfloat16)``."""
+    if not (isinstance(call.func, ast.Attribute)
+            and call.func.attr == "astype" and call.args):
+        return None
+    a = call.args[0]
+    if isinstance(a, ast.Attribute) and a.attr in _WIRE_DTYPES_FLAGGED \
+            and _dotted(a).split(".")[0] in ("np", "numpy", "jnp", "jax"):
+        return a.attr
+    if isinstance(a, ast.Constant) and a.value in _WIRE_DTYPES_FLAGGED:
+        return str(a.value)
+    return None
+
+
 class _FileLinter:
-    def __init__(self, path: str, tree: ast.Module, check_f64: bool):
+    def __init__(self, path: str, tree: ast.Module, check_f64: bool,
+                 check_wire: bool = False):
         self.path = path
         self.check_f64 = check_f64
+        self.check_wire = check_wire
         self.check_stage = not _stage_exempt(path)
         self.tree = tree
         self.found: dict[tuple[int, int, str], LintViolation] = {}
@@ -236,6 +268,16 @@ class _FileLinter:
                             f"mesh axis {sorted(ALLOWED_AXIS_NAMES)}; pass "
                             "the ParallelCtx/MeshAxes name instead of a "
                             "fresh literal")
+                if self.check_wire:
+                    dt = _wire_dtype_cast(node)
+                    if dt is not None:
+                        self.emit(
+                            node, "wire-dtype",
+                            f".astype({dt}) in a MoE engine module: wire "
+                            "dtype conversion belongs to the "
+                            "repro.core.quantize codec (encode_wire/"
+                            "decode_wire); an ad-hoc cast double-quantizes "
+                            "already-encoded payloads")
             if self.check_f64 and _is_f64(node):
                 self.emit(node, "float64-literal",
                           "float64 in kernel/moe code: TPUs have no f64 "
@@ -306,7 +348,8 @@ def lint_source(source: str, path: str = "<string>") -> list[LintViolation]:
             return []
     tree = ast.parse(source, filename=path)
     check_f64 = any(part in _F64_PATH_PARTS for part in Path(path).parts)
-    found = _FileLinter(path, tree, check_f64).run()
+    check_wire = any(part in _WIRE_PATH_PARTS for part in Path(path).parts)
+    found = _FileLinter(path, tree, check_f64, check_wire).run()
     return [v for v in found if not _suppressed(lines, v)]
 
 

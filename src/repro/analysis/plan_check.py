@@ -28,6 +28,14 @@ Checked invariants (rule ids):
 * ``tier-accounting``        -- ``tier_tokens`` / ``tier_replicas`` match the
                                 reroute matrix and placement under the given
                                 topology, and their sums match the totals.
+* ``tier-bytes``             -- (opt-in, via ``tier_bytes=``) reported
+                                per-tier byte volumes equal ``tier_tokens``
+                                times the wire payload width.  The width is
+                                recomputed here from first principles (an
+                                independent mirror of
+                                ``repro.core.quantize.payload_bytes_per_item``)
+                                so a bug in the production helper cannot
+                                vouch for itself.
 * ``rack-local-optimality``  -- (warn) the reroute crosses racks more than
                                 the minimum achievable for its quota table;
                                 expected for the topology-blind EPLB
@@ -50,6 +58,7 @@ from repro.analysis.violation import Violation, errors, format_violations
 __all__ = [
     "PlanViolationError",
     "verify_plan",
+    "verify_tier_bytes",
     "verify_chunking",
     "check_capacities",
     "assert_plan_valid",
@@ -133,6 +142,58 @@ def _min_inter_rack_tokens(lam: np.ndarray, u: np.ndarray,
     demand_g = lam.T.reshape(E, G, rack_size).sum(axis=2)   # (E, G)
     quota_g = u.reshape(E, G, rack_size).sum(axis=2)        # (E, G)
     return int(np.maximum(demand_g - quota_g, 0).sum())
+
+
+def _mirror_payload_width(d_model: int, wire_dtype: str,
+                          base_bytes: int) -> int:
+    """Wire bytes per routed item, recomputed from the format definition.
+
+    Deliberately NOT imported from :mod:`repro.core.quantize`: this is the
+    verifier's independent mirror of ``payload_bytes_per_item``.  The int8
+    wire carries the d_model int8 codes plus one fp32 per-row scale bitcast
+    into 4 in-band int8 lanes; bf16 halves the feature bytes; "none" ships
+    the activation dtype unchanged.
+    """
+    if wire_dtype == "int8":
+        return d_model + 4
+    if wire_dtype == "bf16":
+        return d_model * 2
+    if wire_dtype == "none":
+        return d_model * base_bytes
+    raise ValueError(f"unknown wire_dtype {wire_dtype!r}")
+
+
+def verify_tier_bytes(plan: Any, tier_bytes: Any, *, d_model: int,
+                      wire_dtype: str = "none",
+                      base_bytes: int = 4) -> list[Violation]:
+    """Check reported per-tier byte volumes against tokens x payload width.
+
+    ``tier_bytes`` is the (3,) [local, intra, inter] byte accounting the
+    runtime reports (``MoEStats.tier_bytes``) or the host cost model prices
+    (``comm_plan.tier_wire_bytes``); the plan's ``tier_tokens`` times the
+    independently mirrored payload width is the ground truth.
+    """
+    out: list[Violation] = []
+    tt = getattr(plan, "tier_tokens", None)
+    if tt is None:
+        return [Violation("tier-bytes",
+                          "tier_bytes given but the plan carries no "
+                          "tier_tokens to price", severity="warn")]
+    tb = _np(tier_bytes).astype(np.int64)
+    want = (_np(tt).astype(np.int64)
+            * _mirror_payload_width(d_model, wire_dtype, base_bytes))
+    if tb.shape != want.shape:
+        return [Violation("tier-bytes",
+                          f"tier_bytes shape {tb.shape} != tier_tokens "
+                          f"shape {want.shape}")]
+    if not np.array_equal(tb, want):
+        out.append(Violation(
+            "tier-bytes",
+            f"tier_bytes={tb.tolist()} != tier_tokens x "
+            f"{_mirror_payload_width(d_model, wire_dtype, base_bytes)}B "
+            f"({wire_dtype} wire, d_model={d_model}) = {want.tolist()}: "
+            "the byte accounting disagrees with the wire format"))
+    return out
 
 
 def verify_plan(

@@ -28,10 +28,26 @@ import math
 
 import numpy as np
 
+from repro.core.quantize import payload_bytes_per_item
 from repro.core.topology import Topology
 
 __all__ = ["Edge", "RelaySchedule", "SimStats", "build_relay_schedule",
-           "simulate"]
+           "simulate", "tier_wire_bytes"]
+
+
+def tier_wire_bytes(tier_tokens, d_model: int, wire_dtype: str = "none",
+                    base_bytes: int = 4) -> np.ndarray:
+    """(3,) one-way dispatch-wire bytes per tier ``[local, intra, inter]``.
+
+    The host-side mirror of the ``MoEStats.tier_bytes`` accounting: the
+    planner's per-tier token volumes times the per-item payload width of
+    ``wire_dtype`` (``repro.core.quantize`` -- int8 adds 4 in-band scale
+    bytes per token row).  Used by the byte-oriented rows of
+    ``benchmarks/bench_comm`` so the cost model and the device stats cannot
+    drift on what a wire byte is.
+    """
+    t = np.asarray(tier_tokens, dtype=np.int64)
+    return t * int(payload_bytes_per_item(d_model, wire_dtype, base_bytes))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -7,11 +7,19 @@ import jax.numpy as jnp
 
 from repro.kernels.grouped_gemm.kernel import (
     grouped_matmul_pallas,
+    grouped_matmul_q8_pallas,
     grouped_swiglu_pallas,
+    grouped_swiglu_q8_pallas,
 )
-from repro.kernels.grouped_gemm.ref import grouped_matmul_ref, grouped_swiglu_ref
+from repro.kernels.grouped_gemm.ref import (
+    grouped_matmul_q8_ref,
+    grouped_matmul_ref,
+    grouped_swiglu_q8_ref,
+    grouped_swiglu_ref,
+)
 
-__all__ = ["grouped_matmul", "grouped_swiglu"]
+__all__ = ["grouped_matmul", "grouped_swiglu", "grouped_matmul_q8",
+           "grouped_swiglu_q8"]
 
 
 def _pad_to(v: int, m: int) -> int:
@@ -64,4 +72,58 @@ def grouped_swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, *,
     w3p = jnp.pad(w3, ((0, 0), (0, Kp - K), (0, Np - N)))
     out = grouped_swiglu_pallas(xp, w1p, w3p, bm=bm2, bn=bn2, bk=bk2,
                                 interpret=interpret)
+    return out[:, :M, :N]
+
+
+def grouped_matmul_q8(q: jax.Array, row_scale: jax.Array, wq: jax.Array,
+                      col_scale: jax.Array, *, bm: int = 128, bn: int = 128,
+                      bk: int = 128) -> jax.Array:
+    """w8a8 grouped matmul with automatic padding to block multiples.
+
+    Zero-padding is exact: padded int8 rows/columns are zero codes, so the
+    int32 accumulator is zero there and any padded scale dequantizes to 0.
+    The M tile floor is 32 (int8 min sublane tile on TPU, vs 8 for fp32).
+    """
+    G, M, K = q.shape
+    _, _, N = wq.shape
+    if M * N * K < 128 ** 3:  # tiny: tiling overhead dominates
+        return grouped_matmul_q8_ref(q, row_scale, wq, col_scale)
+    interpret = jax.default_backend() != "tpu"
+    bm2, bn2, bk2 = min(bm, _pad_to(M, 32)), min(bn, _pad_to(N, 128)), \
+        min(bk, _pad_to(K, 128))
+    Mp, Np, Kp = _pad_to(M, bm2), _pad_to(N, bn2), _pad_to(K, bk2)
+    qp = jnp.pad(q, ((0, 0), (0, Mp - M), (0, Kp - K)))
+    wp = jnp.pad(wq, ((0, 0), (0, Kp - K), (0, Np - N)))
+    rs = jnp.pad(row_scale, ((0, 0), (0, Mp - M)))
+    cs = jnp.pad(col_scale, ((0, 0), (0, Np - N)))
+    out = grouped_matmul_q8_pallas(qp, rs, wp, cs, bm=bm2, bn=bn2, bk=bk2,
+                                   interpret=interpret)
+    return out[:, :M, :N]
+
+
+def grouped_swiglu_q8(q: jax.Array, row_scale: jax.Array,
+                      w1q: jax.Array, w1s: jax.Array,
+                      w3q: jax.Array, w3s: jax.Array, *, bm: int = 128,
+                      bn: int = 128, bk: int = 128) -> jax.Array:
+    """w8a8 fused SwiGLU with automatic padding to block multiples.
+
+    Padding is safe for the gate too: h == g == 0 on padded rows/cols and
+    ``0 * logistic(0) * 0 == 0``.
+    """
+    G, M, K = q.shape
+    _, _, N = w1q.shape
+    if M * N * K < 128 ** 3:  # tiny: tiling overhead dominates
+        return grouped_swiglu_q8_ref(q, row_scale, w1q, w1s, w3q, w3s)
+    interpret = jax.default_backend() != "tpu"
+    bm2, bn2, bk2 = min(bm, _pad_to(M, 32)), min(bn, _pad_to(N, 128)), \
+        min(bk, _pad_to(K, 128))
+    Mp, Np, Kp = _pad_to(M, bm2), _pad_to(N, bn2), _pad_to(K, bk2)
+    qp = jnp.pad(q, ((0, 0), (0, Mp - M), (0, Kp - K)))
+    w1p = jnp.pad(w1q, ((0, 0), (0, Kp - K), (0, Np - N)))
+    w3p = jnp.pad(w3q, ((0, 0), (0, Kp - K), (0, Np - N)))
+    rs = jnp.pad(row_scale, ((0, 0), (0, Mp - M)))
+    s1 = jnp.pad(w1s, ((0, 0), (0, Np - N)))
+    s3 = jnp.pad(w3s, ((0, 0), (0, Np - N)))
+    out = grouped_swiglu_q8_pallas(qp, rs, w1p, s1, w3p, s3, bm=bm2, bn=bn2,
+                                   bk=bk2, interpret=interpret)
     return out[:, :M, :N]

@@ -5,7 +5,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["grouped_matmul_ref", "grouped_swiglu_ref"]
+__all__ = ["grouped_matmul_ref", "grouped_swiglu_ref",
+           "grouped_matmul_q8_ref", "grouped_swiglu_q8_ref"]
 
 
 def grouped_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
@@ -22,3 +23,27 @@ def grouped_swiglu_ref(x: jax.Array, w1: jax.Array, w3: jax.Array) -> jax.Array:
     g = jnp.einsum("gmk,gkn->gmn", x.astype(jnp.float32),
                    w3.astype(jnp.float32))
     return (jax.nn.silu(h) * g).astype(x.dtype)
+
+
+def grouped_matmul_q8_ref(q: jax.Array, row_scale: jax.Array, wq: jax.Array,
+                          col_scale: jax.Array) -> jax.Array:
+    """w8a8 grouped matmul oracle: int32 accumulate, dequant at the end.
+
+    q: (G, M, K) int8 codes with per-row fp32 scales row_scale (G, M);
+    wq: (G, K, N) int8 codes with per-column scales col_scale (G, N).
+    Returns (G, M, N) fp32 = acc * row_scale ⊗ col_scale -- the rank-1
+    dequant the Pallas kernel applies on its final K step.
+    """
+    acc = jnp.einsum("gmk,gkn->gmn", q, wq,
+                     preferred_element_type=jnp.int32)
+    return (acc.astype(jnp.float32)
+            * row_scale[:, :, None] * col_scale[:, None, :])
+
+
+def grouped_swiglu_q8_ref(q: jax.Array, row_scale: jax.Array,
+                          w1q: jax.Array, w1s: jax.Array,
+                          w3q: jax.Array, w3s: jax.Array) -> jax.Array:
+    """w8a8 grouped SwiGLU oracle: both contractions int8, gate in fp32."""
+    h = grouped_matmul_q8_ref(q, row_scale, w1q, w1s)
+    g = grouped_matmul_q8_ref(q, row_scale, w3q, w3s)
+    return jax.nn.silu(h) * g

@@ -75,6 +75,10 @@ class RuntimeConfig:
     # count is not divisible or the dispatch engine is "reference".
     use_kernel: bool = False
     dispatch_impl: str = "fused"   # "fused" | "reference" MoE dispatch engine
+    wire_dtype: str = "none"       # EP wire codec: "none" | "bf16" | "int8"
+    # (repro.core.quantize, DESIGN.md S12); needs the fused engine, so it
+    # degrades to "none" when dispatch_impl == "reference".
+    ffn_dtype: str = "none"        # expert FFN compute: "none" | "int8" (w8a8)
     block_kv: int = 512
     dtype: Any = jnp.float32
     remat: bool = True
@@ -222,6 +226,9 @@ def moe_config(cfg: ModelConfig, rcfg: RuntimeConfig, pctx: ParallelCtx,
     if overlap >= 1 and (tokens_per_rank % overlap != 0
                          or rcfg.dispatch_impl != "fused"):
         overlap = 1   # overlap < 1 passes through to MoEConfig's validation
+    # The wire codec rides the fused engine's packed buffers; like overlap,
+    # degrade rather than fail when the reference oracle engine is selected.
+    wire_dtype = rcfg.wire_dtype if rcfg.dispatch_impl == "fused" else "none"
     return MoEConfig(
         gating=gating, balancer=bal, d_model=cfg.d_model, d_ff=m.d_ff,
         ep_size=ep, cap_pair=cap_pair, cap_slot=cap_slot,
@@ -230,6 +237,7 @@ def moe_config(cfg: ModelConfig, rcfg: RuntimeConfig, pctx: ParallelCtx,
         use_kernel=rcfg.use_kernel,
         dispatch_mode=dispatch_mode, dispatch_impl=rcfg.dispatch_impl,
         racks=pctx.racks,
+        wire_dtype=wire_dtype, ffn_dtype=rcfg.ffn_dtype,
     )
 
 

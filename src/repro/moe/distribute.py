@@ -27,6 +27,8 @@ import math
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantize import decode_wire, encode_wire
+
 __all__ = ["replica_selector", "select_local_replicas", "materialize_replicas",
            "materialize_replica_stack"]
 
@@ -167,6 +169,7 @@ def materialize_replica_stack(
     *,
     n_chunks: int = 1,
     racks: int = 1,
+    wire_dtype: str = "none",
 ) -> tuple[jax.Array, ...]:
     """One collective schedule for several per-expert weight tensors.
 
@@ -179,6 +182,16 @@ def materialize_replica_stack(
     bit-identical to its standalone transfer; ``n_chunks`` tiles the packed
     payload instead of each tensor separately.
 
+    ``wire_dtype`` quantizes the stream (DESIGN.md S12): each tensor is
+    encoded once at the home rank (per-row symmetric int8, fp32 scales
+    packed in-band by :func:`repro.core.quantize.encode_wire`, or a bf16
+    cast) and the encoded bytes ride the same packed reduce-scatter.  The
+    reduction stays exact on encoded payloads because every slot has exactly
+    ONE nonzero (home) contribution and all-zero rows encode to scale 0, so
+    the cross-rank sum reproduces the home encoding bit-for-bit; decode
+    happens once on the receiver.  Replica weights are then a quantized
+    image of their mains (lossy at int8/bf16) while mains stay exact.
+
     Args:
       ws: per-expert weight tensors, each (E_local, ...) with identical
         leading dim (e.g. ``(w1, w3, w2)``).
@@ -187,15 +200,17 @@ def materialize_replica_stack(
       A tuple of replica tensors, the i-th shaped ``(N_slot,) + ws[i].shape[1:]``.
     """
     epr = ws[0].shape[0]
-    sizes = [math.prod(w.shape[1:]) for w in ws]
+    enc = [encode_wire(w, wire_dtype) for w in ws]
+    sizes = [math.prod(w.shape[1:]) for w in enc]
     packed = jnp.concatenate(
-        [w.reshape(epr, 1, -1) for w in ws], axis=-1)     # (E_local, 1, tot)
+        [w.reshape(epr, 1, -1) for w in enc], axis=-1)    # (E_local, 1, tot)
     rep = materialize_replicas(packed, x_slots, my_rank, axis_name,
                                n_chunks=n_chunks, racks=racks)
     n_slot = rep.shape[0]
     out = []
     off = 0
-    for w, sz in zip(ws, sizes):
-        out.append(rep[:, 0, off:off + sz].reshape((n_slot,) + w.shape[1:]))
+    for w, e, sz in zip(ws, enc, sizes):
+        r = rep[:, 0, off:off + sz].reshape((n_slot,) + e.shape[1:])
+        out.append(decode_wire(r, wire_dtype, w.dtype))
         off += sz
     return tuple(out)

@@ -4,6 +4,15 @@ Computes SwiGLU independently per physical expert slot on capacity-padded
 token buffers.  The einsum formulation is the XLA path (used by dry-runs and
 CPU tests); ``use_kernel=True`` routes the two grouped GEMMs through the
 Pallas grouped-GEMM kernel (TPU hot path, validated in interpret mode).
+
+``ffn_dtype="int8"`` switches to the w8a8 path (DESIGN.md S12): activations
+are quantized per token row, weights per (expert, out-feature) column over
+the contraction axis, both GEMMs accumulate in int32 and dequantize at the
+end (``acc * row_scale * col_scale``); the SwiGLU gate and the inter-GEMM
+requantization run in fp32.  When the dispatch wire already delivered int8
+slot buffers (``wire_dtype == "int8"``), the caller passes the wire codes +
+scales straight in (``xs`` int8 + ``xs_scale``) and no dequant round-trip
+happens between wire and compute.
 """
 
 from __future__ import annotations
@@ -11,7 +20,43 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["grouped_ffn"]
+from repro.core.quantize import encode_int8, quantize_rows
+from repro.kernels.grouped_gemm.ref import (
+    grouped_matmul_q8_ref,
+    grouped_swiglu_q8_ref,
+)
+
+__all__ = ["grouped_ffn", "quantize_weight_cols"]
+
+
+def quantize_weight_cols(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-(group, out-feature) symmetric int8 over the contraction axis.
+
+    ``w``: (G, K, N) -> (codes int8 (G, K, N), scales fp32 (G, N)).  Column
+    granularity keeps the dequant a rank-1 outer product with the activation
+    row scales (``acc[m, n] * a[m] * b[n]``), which the kernel applies on
+    the final K step without materialising a per-element scale tensor.
+    """
+    scales = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=1) / 127.0
+    return encode_int8(w, scales[:, None, :]), scales
+
+
+def _grouped_ffn_q8(xs: jax.Array, xs_scale: jax.Array, w1: jax.Array,
+                    w3: jax.Array, w2: jax.Array, *,
+                    use_kernel: bool) -> jax.Array:
+    """w8a8 grouped SwiGLU: int8 codes in, fp32 out."""
+    w1q, w1s = quantize_weight_cols(w1)
+    w3q, w3s = quantize_weight_cols(w3)
+    w2q, w2s = quantize_weight_cols(w2)
+    if use_kernel:
+        from repro.kernels.grouped_gemm import ops as gg
+
+        act = gg.grouped_swiglu_q8(xs, xs_scale, w1q, w1s, w3q, w3s)
+        aq, as_ = quantize_rows(act)
+        return gg.grouped_matmul_q8(aq, as_, w2q, w2s)
+    act = grouped_swiglu_q8_ref(xs, xs_scale, w1q, w1s, w3q, w3s)
+    aq, as_ = quantize_rows(act)
+    return grouped_matmul_q8_ref(aq, as_, w2q, w2s)
 
 
 def grouped_ffn(
@@ -22,20 +67,31 @@ def grouped_ffn(
     w2: jax.Array,
     *,
     use_kernel: bool = False,
+    ffn_dtype: str = "none",
+    xs_scale: jax.Array | None = None,
 ) -> jax.Array:
     """Per-slot SwiGLU.
 
     Args:
-      xs: (G, C, D) capacity-padded token buffers, one per physical slot.
+      xs: (G, C, D) capacity-padded token buffers, one per physical slot --
+        fp activations, or int8 wire codes on the end-to-end quantized path.
       valid: (G, C) bool mask of real tokens.
       w1, w3: (G, D, F); w2: (G, F, D) per-slot weights.
       use_kernel: dispatch the GEMMs to the Pallas grouped-GEMM kernel.
+      ffn_dtype: "none" (fp reference, default) or "int8" (w8a8).
+      xs_scale: (G, C) fp32 per-row scales accompanying int8 ``xs``; required
+        iff ``xs`` arrives already encoded.
 
     Returns:
-      (G, C, D) outputs, zero on padded rows.
+      (G, C, D) outputs in the weight dtype, zero on padded rows.
     """
+    out_dtype = w1.dtype if xs.dtype == jnp.int8 else xs.dtype
     xs = jnp.where(valid[:, :, None], xs, 0)
-    if use_kernel:
+    if ffn_dtype == "int8":
+        if xs.dtype != jnp.int8:
+            xs, xs_scale = quantize_rows(xs)
+        out = _grouped_ffn_q8(xs, xs_scale, w1, w3, w2, use_kernel=use_kernel)
+    elif use_kernel:
         from repro.kernels.grouped_gemm import ops as gg
 
         # Fused SwiGLU kernel: one pass reads xs once for both projections
@@ -47,4 +103,4 @@ def grouped_ffn(
         g = jnp.einsum("gcd,gdf->gcf", xs, w3)
         act = jax.nn.silu(h) * g
         out = jnp.einsum("gcf,gfd->gcd", act, w2)
-    return jnp.where(valid[:, :, None], out, 0).astype(xs.dtype)
+    return jnp.where(valid[:, :, None], out, 0).astype(out_dtype)

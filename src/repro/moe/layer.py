@@ -69,6 +69,17 @@ class MoEConfig:
     # repro.moe.permute) | "reference" (multi-sort scatter path,
     # repro.moe.dispatch -- kept as the equivalence oracle)
     racks: int = 1                 # racks of the two-level EP group
+    wire_dtype: str = "none"       # EP-wire payload codec (DESIGN.md S12):
+    # "none" (native dtype, bit-exact oracle path) | "bf16" | "int8"
+    # (per-row symmetric, fp32 scales packed in-band).  Covers the token
+    # all_to_all (both directions) and the replica weight stream; routing,
+    # counts and slot placement are computed BEFORE encoding and are
+    # bit-identical across wire dtypes.  Fused engine only.
+    ffn_dtype: str = "none"        # expert FFN compute dtype: "none" (fp
+    # reference, default) | "int8" (w8a8 grouped SwiGLU, per-token-row
+    # activation scales x per-(expert, out-feature) weight scales).  With
+    # wire_dtype == "int8" the slot buffers feed the kernel still encoded
+    # (no dequant round-trip).
 
     def __post_init__(self):
         # Fail at construction, not at trace time (DESIGN.md S9).
@@ -93,6 +104,14 @@ class MoEConfig:
             raise ValueError(
                 "overlap_chunks > 1 requires dispatch_impl='fused' (the "
                 "reference scatter path is the unchunked equivalence oracle)")
+        if self.wire_dtype not in ("none", "bf16", "int8"):
+            raise ValueError(f"unknown wire_dtype: {self.wire_dtype!r}")
+        if self.ffn_dtype not in ("none", "int8"):
+            raise ValueError(f"unknown ffn_dtype: {self.ffn_dtype!r}")
+        if self.wire_dtype != "none" and self.dispatch_impl != "fused":
+            raise ValueError(
+                "wire_dtype != 'none' requires dispatch_impl='fused' (the "
+                "reference scatter path is the uncompressed oracle)")
 
     @property
     def ranks_per_rack(self) -> int:

@@ -42,6 +42,12 @@ import jax.numpy as jnp
 from repro.core import balancer as balancer_mod
 from repro.core.layout import physical_slot_of
 from repro.core.planner import token_targets
+from repro.core.quantize import (
+    decode_wire,
+    encode_wire,
+    payload_bytes_per_item,
+    split_wire_int8,
+)
 from repro.moe.dispatch import (
     bucket_by_slot,
     combine_tokens,
@@ -94,6 +100,10 @@ class MoEStats(NamedTuple):
     counts: jax.Array           # (E,) local per-expert load
     tier_tokens: jax.Array | None = None    # (3,) [local, intra, inter]
     tier_replicas: jax.Array | None = None  # (2,) [intra, inter] (rack-aware)
+    tier_bytes: jax.Array | None = None     # (3,) one-way dispatch-wire bytes
+                                #    per tier = tier_tokens * the per-item
+                                #    payload width of cfg.wire_dtype
+                                #    (repro.core.quantize, DESIGN.md S12)
 
 
 class StageCtx(NamedTuple):
@@ -142,11 +152,16 @@ class DispatchState(NamedTuple):
     primitives from being called outside this module.
     """
 
-    xs: jax.Array        # (num_slots, cap_slot, D) slot buffers
+    xs: jax.Array        # (num_slots, cap_slot, D) slot buffers; int8 codes
+                         #    on the end-to-end quantized path (see xs_scale)
     valid: jax.Array     # (num_slots, cap_slot) bool
     inverse: Any         # mode-specific inverse-path state (see above)
     drops_dispatch: jax.Array   # () pair-capacity drops this chunk
     drops_slot: jax.Array       # () slot-capacity drops this chunk
+    xs_scale: jax.Array | None = None   # (num_slots, cap_slot) fp32 per-row
+                         #    wire scales when wire_dtype == ffn_dtype ==
+                         #    "int8": the slot buffers stay encoded and feed
+                         #    the w8a8 kernel directly (no dequant round-trip)
 
 
 def make_stage_ctx(cfg, axis_name) -> StageCtx:
@@ -244,7 +259,8 @@ def distribute_stage(ctx: StageCtx, params, gs: GateState,
     cfg = ctx.cfg
     w1r, w3r, w2r = materialize_replica_stack(
         (params.w1, params.w3, params.w2), ps.plan.x, gs.my, ctx.axis_name,
-        n_chunks=cfg.distribute_chunks, racks=cfg.racks)
+        n_chunks=cfg.distribute_chunks, racks=cfg.racks,
+        wire_dtype=cfg.wire_dtype)
     return DistributeState(
         w1_all=jnp.concatenate([params.w1, w1r], axis=0),
         w3_all=jnp.concatenate([params.w3, w3r], axis=0),
@@ -299,18 +315,30 @@ def dispatch_stage(ctx: StageCtx, x_chunk: jax.Array,
     if cfg.dispatch_impl == "fused":
         # Single-sort permutation engine (repro.moe.permute): on a factored
         # mesh the same destination-major buffers ride the two-hop tiered
-        # exchange; the count metadata rides both hops unchanged.
+        # exchange; the count metadata rides both hops unchanged.  The
+        # payload is wire-encoded BEFORE the first hop (quantization happens
+        # once, at the source; the intra-rack scatter of the two-hop wire
+        # moves the already-encoded bytes) and decoded only after bucketing.
+        # Routing lives entirely in the count metadata, so token placement
+        # is bit-identical across wire dtypes (DESIGN.md S12).
         disp = fused_dispatch(
             x_chunk, expert_ids, ps.plan.cum_q[gs.my], ps.slot_of_all,
             num_slots=num_slots, cap_pair=cfg.cap_pair, occ_offset=occ_offset,
         )
-        recv_x = _exchange(ctx, disp.send_x)
+        recv_x = _exchange(ctx, encode_wire(disp.send_x, cfg.wire_dtype))
         recv_c = _exchange(ctx, disp.send_counts)
         xs, valid, meta, slot_drops = fused_bucket(
             recv_x, recv_c, num_slots=num_slots, cap_slot=cfg.cap_slot
         )
+        xs_scale = None
+        if cfg.wire_dtype == "int8" and cfg.ffn_dtype == "int8":
+            # End-to-end quantized: hand ComputeStage the codes + scales.
+            xs, xs_scale = split_wire_int8(xs)
+        else:
+            xs = decode_wire(xs, cfg.wire_dtype, x_chunk.dtype)
         return DispatchState(xs=xs, valid=valid, inverse=(disp, meta),
-                             drops_dispatch=disp.drops, drops_slot=slot_drops)
+                             drops_dispatch=disp.drops, drops_slot=slot_drops,
+                             xs_scale=xs_scale)
 
     # Reference multi-sort scatter path (the equivalence oracle; unchunked).
     q_row = ps.plan.q[gs.my]                               # (E, R)
@@ -334,7 +362,8 @@ def compute_stage(ctx: StageCtx, ds: DispatchState,
                   dist: DistributeState) -> jax.Array:
     """Grouped FFN over this rank's physical slots for one chunk."""
     return grouped_ffn(ds.xs, ds.valid, dist.w1_all, dist.w3_all,
-                       dist.w2_all, use_kernel=ctx.cfg.use_kernel)
+                       dist.w2_all, use_kernel=ctx.cfg.use_kernel,
+                       ffn_dtype=ctx.cfg.ffn_dtype, xs_scale=ds.xs_scale)
 
 
 def combine_stage(ctx: StageCtx, ds: DispatchState, out: jax.Array,
@@ -357,9 +386,14 @@ def combine_stage(ctx: StageCtx, ds: DispatchState, out: jax.Array,
         vals = ret[0] * flat_w[:, None].astype(ret.dtype)
         return jnp.zeros((Tc, D), ret.dtype).at[items_t].add(vals)
     if cfg.dispatch_impl == "fused":
+        # The return wire carries the same codec as the forward wire: FFN
+        # outputs are encoded per-row before the reverse exchange and decoded
+        # at the source rank, right before the weighted reduce.
         disp, meta = ds.inverse
-        ret = _exchange(ctx, fused_unbucket(out, meta), reverse=True)
-        return fused_combine(ret, disp, weights)
+        ret = _exchange(ctx, encode_wire(fused_unbucket(out, meta),
+                                         cfg.wire_dtype), reverse=True)
+        return fused_combine(decode_wire(ret, cfg.wire_dtype, out.dtype),
+                             disp, weights)
     disp, back_idx = ds.inverse
     ret = unbucket(out, ds.valid, back_idx, (cfg.ep_size, cfg.cap_pair, D))
     if ctx.axis_name is not None:
@@ -484,6 +518,15 @@ def run_staged_moe(
     if cfg.n_shared_experts > 0:
         y = y + swiglu(x, params.shared_w1, params.shared_w3, params.shared_w2)
 
+    tier_bytes = None
+    if ps.plan.tier_tokens is not None:
+        # One-way dispatch-wire bytes per tier: the item count times the
+        # wire payload width (base width = the activation dtype; int8 adds
+        # 4 in-band scale bytes per row).  Shares its width definition with
+        # the host cost model and the static verifier via repro.core.quantize.
+        tier_bytes = ps.plan.tier_tokens * payload_bytes_per_item(
+            D, cfg.wire_dtype, base_bytes=x.dtype.itemsize)
+
     stats = MoEStats(
         drops_dispatch=drops_dispatch,
         drops_slot=drops_slot,
@@ -493,5 +536,6 @@ def run_staged_moe(
         counts=gs.gate_out.counts,
         tier_tokens=ps.plan.tier_tokens,
         tier_replicas=ps.plan.tier_replicas,
+        tier_bytes=tier_bytes,
     )
     return y.astype(x.dtype), gs.gate_out.aux_loss, stats

@@ -15,6 +15,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.quantize import decode_int8, encode_int8, tensor_scale
+
 __all__ = ["CompressState", "init_state", "compress", "decompress",
            "psum_compressed"]
 
@@ -29,16 +31,21 @@ def init_state(grads):
 
 
 def compress(g: jax.Array, state: CompressState):
-    """fp -> (int8, scale); the quantization error lands in the residual."""
+    """fp -> (int8, scale); the quantization error lands in the residual.
+
+    The int8 codec itself lives in :mod:`repro.core.quantize` (shared with
+    the wire and FFN paths); this module only adds the error-feedback carry
+    appropriate for *gradients*, where the same tensor recurs every step.
+    """
     gf = g.astype(jnp.float32) + state.residual
-    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
-    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
-    residual = gf - q.astype(jnp.float32) * scale
+    scale = tensor_scale(gf)
+    q = encode_int8(gf, scale)
+    residual = gf - decode_int8(q, scale)
     return q, scale, CompressState(residual)
 
 
 def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
-    return q.astype(jnp.float32) * scale
+    return decode_int8(q, scale)
 
 
 def psum_compressed(g: jax.Array, state: CompressState, axis_name: str):
@@ -51,10 +58,9 @@ def psum_compressed(g: jax.Array, state: CompressState, axis_name: str):
     rounding.  The payload crosses the wire as the int8 tensor (XLA upcasts
     the reduction arithmetic to int32)."""
     gf = g.astype(jnp.float32) + state.residual
-    local_scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
-    scale = jax.lax.pmax(local_scale, axis_name)
-    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
-    new_state = CompressState(gf - q.astype(jnp.float32) * scale)
+    scale = jax.lax.pmax(tensor_scale(gf), axis_name)
+    q = encode_int8(gf, scale)
+    new_state = CompressState(gf - decode_int8(q, scale))
     n = jax.lax.psum(1, axis_name)
     total = jax.lax.psum(q.astype(jnp.int32), axis_name)
     return (total.astype(jnp.float32) * scale / n).astype(g.dtype), new_state

@@ -175,6 +175,24 @@ def test_hook_skips_traced_solves(rng):
     assert int(plan.q.sum()) == int(lam.sum())
 
 
+def test_verify_tier_bytes_green_and_detects_mispricing(valid_plan):
+    """The byte-accounting rule: tier_bytes must equal tier_tokens times the
+    verifier's independently mirrored payload width."""
+    plan, _, _ = valid_plan
+    tt = np.asarray(plan.tier_tokens, dtype=np.int64)
+    for wire, width in (("none", 16 * 4), ("bf16", 16 * 2), ("int8", 16 + 4)):
+        assert not plan_check.verify_tier_bytes(
+            plan, tt * width, d_model=16, wire_dtype=wire)
+    vio = plan_check.verify_tier_bytes(plan, tt * 16, d_model=16,
+                                       wire_dtype="int8")
+    assert any(v.rule == "tier-bytes" for v in errors(vio))
+    # Flat plans carry no tier_tokens to price: warn, never an error.
+    flat, _ = _solve("ultraep", _skewed_lam(np.random.default_rng(1), 4, 16))
+    vio = plan_check.verify_tier_bytes(flat, tt * 20, d_model=16,
+                                       wire_dtype="int8")
+    assert vio and not errors(vio)
+
+
 def test_hosted_matrix_orientation(valid_plan):
     plan, _, _ = valid_plan
     hm = hosted_matrix(plan)
@@ -478,6 +496,31 @@ class TestLint:
                "    return materialize_replicas(w, xs, r, 'model')"
                "  # uep-lint: disable=stage-boundary\n")
         assert _rules(src) == set()
+
+    def test_wire_dtype_cast_flagged_in_moe_paths(self):
+        """Engine modules must route payload casts through core/quantize:
+        a bare .astype(int8/bfloat16) under moe/ is a codec bypass."""
+        src = ("import jax.numpy as jnp\n"
+               "def f(x):\n"
+               "    return x.astype(jnp.int8)\n")
+        assert _rules(src, "src/repro/moe/stages.py") == {"wire-dtype"}
+        assert _rules(src.replace("jnp.int8", "'bfloat16'"),
+                      "src/repro/moe/permute.py") == {"wire-dtype"}
+        # core/quantize (and anything outside moe/) is the sanctioned home.
+        assert _rules(src, "src/repro/core/quantize.py") == set()
+        assert _rules(src, "src/repro/kernels/x.py") == set()
+        # Dtype-preserving casts don't trip the rule.
+        ok = ("import jax.numpy as jnp\n"
+              "def f(x, y):\n"
+              "    return x.astype(y.dtype)\n")
+        assert _rules(ok, "src/repro/moe/stages.py") == set()
+
+    def test_wire_dtype_suppression(self):
+        src = ("import jax.numpy as jnp\n"
+               "def f(x):\n"
+               "    return x.astype(jnp.int8)"
+               "  # uep-lint: disable=wire-dtype\n")
+        assert _rules(src, "src/repro/moe/stages.py") == set()
 
 
 # ======================================================================

@@ -12,7 +12,11 @@ Run locally with ``python tools/verify_plans.py``; CI runs it in the
 lint-and-verify job.  ``--seeds N`` widens the sweep; ``--chunks 2,4``
 additionally splits each load into overlap chunks and verifies the staged
 driver's per-chunk buffer invariants
-(:func:`repro.analysis.plan_check.verify_chunking`).
+(:func:`repro.analysis.plan_check.verify_chunking`); ``--wire-dtype
+int8,bf16`` additionally prices each rack-aware plan's tier volumes with the
+production wire-byte helper (``repro.core.quantize.payload_bytes_per_item``)
+and cross-checks them against the verifier's independent width mirror
+(:func:`repro.analysis.plan_check.verify_tier_bytes`).
 """
 
 from __future__ import annotations
@@ -59,9 +63,18 @@ def main(argv: list[str] | None = None) -> int:
                     help="comma-separated overlap chunk counts; each plan is "
                          "additionally checked with verify_chunking against "
                          "its own zero-drop capacities (e.g. '2,4')")
+    ap.add_argument("--wire-dtype", type=str, default="",
+                    help="comma-separated wire dtypes; each rack-aware "
+                         "plan's tier volumes are priced with the "
+                         "production byte helper and cross-checked against "
+                         "the verifier's independent width mirror (e.g. "
+                         "'int8,bf16')")
+    ap.add_argument("--d-model", type=int, default=4096,
+                    help="payload feature width for the wire-byte check")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
     chunk_list = [int(c) for c in args.chunks.split(",") if c.strip()]
+    wire_list = [w.strip() for w in args.wire_dtype.split(",") if w.strip()]
 
     import jax
     jax.config.update("jax_platforms", "cpu")
@@ -70,6 +83,7 @@ def main(argv: list[str] | None = None) -> int:
     from repro.analysis import plan_check, sched_check
     from repro.analysis.violation import errors, warnings
     from repro.core import balancer, comm_plan
+    from repro.core.quantize import payload_bytes_per_item
     from repro.core.topology import Topology
 
     n_cells = n_err = n_warn = 0
@@ -117,6 +131,18 @@ def main(argv: list[str] | None = None) -> int:
                         vio += plan_check.verify_chunking(
                             plan, chunk_lam, cap_pair=cap_pair,
                             cap_slot=cap_slot)
+
+                    # Wire-dtype sweep: price the tier volumes with the
+                    # production helper, check against the verifier's
+                    # independent width mirror (rack-aware plans only --
+                    # flat plans carry no tier_tokens to price).
+                    if plan.tier_tokens is not None:
+                        for wd in wire_list:
+                            tb = (np.asarray(plan.tier_tokens, dtype=np.int64)
+                                  * payload_bytes_per_item(args.d_model, wd))
+                            vio += plan_check.verify_tier_bytes(
+                                plan, tb, d_model=args.d_model,
+                                wire_dtype=wd)
 
                     n_cells += 1
                     cell = (f"E={E} R={R} rack={rack_size} skew={skew} "
