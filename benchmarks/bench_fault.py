@@ -1,0 +1,195 @@
+"""Degraded-fabric benchmark: throughput and imbalance vs straggler severity.
+
+One rank of a 2x4 virtual mesh is slowed to ``severity`` x speed (the
+:class:`repro.fault.injector.FaultInjector` ``slow_rank`` fault) and three
+planning policies are compared on the *modeled* step time
+
+    t_step = max_r( load_r / speed_r )
+
+-- the straggler-bound completion time of a synchronous MoE step:
+
+* ``none``        -- balancer off (home placement), health-blind.
+* ``blind``       -- ultraep balancing, health-blind: equal per-rank quotas,
+                     so the slow rank's equal share bounds the step.
+* ``health``      -- ultraep with ``health_weight`` = the observed speeds:
+                     quotas scale with capacity, the slow rank gets a
+                     proportionally smaller share.
+
+At severity 0.5 the ideal recovery of health-weighted over blind is
+(R/2) / ((R-1) + 0.5) steps... concretely R=8 gives 8/2=4 vs 7.5 effective
+ranks: 1.875x; the issue's acceptance bar is >= 1.2x.  The sweep also
+re-measures the paper's imbalance claim (pre 1.3-4.01 -> post ~1.01-1.04)
+under degradation, in *speed-weighted* form (max_r(load_r/speed_r) divided
+by total/sum(speed) -- 1.0 = every rank finishes simultaneously).
+
+A second section exercises the degradation ladder off the hot path:
+injected solve failures drive :class:`repro.moe.stages.Resilience` through
+last-good reuse and the no-balance fallback, recording the counters that
+prove the ladder ran.
+
+Writes ``BENCH_fault.json`` via :func:`main`; wired into ``benchmarks.run``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import metrics
+
+SEVERITIES = (1.0, 0.75, 0.5, 0.25)
+
+
+def synth_load(rng, R, E, alpha=1.15, scale=40.0):
+    """Power-law routing skew, same family as bench_planner."""
+    return (rng.pareto(alpha, size=(R, E)) * scale).astype(np.int64)
+
+
+def modeled_step_time(load_r, speed) -> float:
+    """Straggler-bound synchronous step time (arbitrary units)."""
+    load_r = np.asarray(load_r, dtype=np.float64)
+    speed = np.maximum(np.asarray(speed, dtype=np.float64), 1e-9)
+    return float(np.max(load_r / speed))
+
+
+def weighted_imbalance(load_r, speed) -> float:
+    """Step time over the speed-weighted ideal (1.0 = perfect)."""
+    total = float(np.asarray(load_r, dtype=np.float64).sum())
+    if total == 0:
+        return 1.0
+    ideal = total / float(np.asarray(speed, dtype=np.float64).sum())
+    return modeled_step_time(load_r, speed) / ideal
+
+
+def sweep(R: int = 8, E: int = 64, n_slot: int = 2, rack_size: int = 4,
+          trials: int = 3, seed: int = 0, quiet: bool = False):
+    """Severity sweep: one straggler rank, three planning policies."""
+    import jax.numpy as jnp
+
+    from repro.core import balancer
+    from repro.fault.injector import FaultInjector, FaultSpec
+
+    home = np.repeat(np.arange(R), E // R)
+    home_j = jnp.asarray(home, jnp.int32)
+    cfg = balancer.BalancerConfig(mode="ultraep", n_slot=n_slot)
+    rng = np.random.default_rng(seed)
+    rows = []
+    for sev in SEVERITIES:
+        inj = FaultInjector([FaultSpec("slow_rank", rank=0, severity=sev)])
+        speed = inj.rank_speed(R)
+        for t in range(trials):
+            lam = synth_load(rng, R, E)
+            lam_j = jnp.asarray(lam, jnp.int32)
+            load_none = np.bincount(home, weights=lam.sum(0), minlength=R)
+            p_blind = balancer.solve(lam_j, home_j, cfg, rack_size=rack_size)
+            p_health = balancer.solve(
+                lam_j, home_j, cfg, rack_size=rack_size,
+                health_weight=jnp.asarray(speed, jnp.float32))
+            load_blind = np.asarray(p_blind.u).sum(axis=0)
+            load_health = np.asarray(p_health.u).sum(axis=0)
+            t_none = modeled_step_time(load_none, speed)
+            t_blind = modeled_step_time(load_blind, speed)
+            t_health = modeled_step_time(load_health, speed)
+            rows.append({
+                "severity": sev,
+                "trial": t,
+                "step_time_none": t_none,
+                "step_time_blind": t_blind,
+                "step_time_health": t_health,
+                # throughput recovery of health-weighted over health-blind
+                "recovery": t_blind / t_health,
+                "balancer_gain": t_none / t_blind,
+                # the paper's (unweighted) imbalance claim, re-measured
+                "imbalance_pre": metrics.imbalance(load_none),
+                "imbalance_post": metrics.imbalance(load_blind),
+                # degradation-aware form: 1.0 = all ranks finish together
+                "weighted_imbalance_blind": weighted_imbalance(
+                    load_blind, speed),
+                "weighted_imbalance_health": weighted_imbalance(
+                    load_health, speed),
+            })
+            if not quiet:
+                r = rows[-1]
+                print(f"sev={sev:4.2f} trial={t} "
+                      f"t(none/blind/health)="
+                      f"{t_none:7.1f}/{t_blind:7.1f}/{t_health:7.1f} "
+                      f"recovery={r['recovery']:.2f}x "
+                      f"w-imb={r['weighted_imbalance_health']:.3f}")
+    return rows
+
+
+def ladder(steps: int = 6, R: int = 4, E: int = 16, n_slot: int = 2,
+           seed: int = 0):
+    """Drive the solve ladder through fail -> last-good -> no-balance.
+
+    Steps 0-1 solve cleanly (seeding the last-good cache), steps 2-3 inject
+    a planner fault (ladder rung 1: last-good reuse), then the cache is
+    dropped and step 4 faults again (rung 2: no-balance fallback); step 5
+    recovers.  Returns the counters -- the proof the ladder actually ran.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import balancer
+    from repro.fault.injector import FaultInjector, FaultSpec
+    from repro.moe.stages import Resilience
+
+    inj = FaultInjector(
+        [FaultSpec("solve_fail", start_step=2, end_step=4),
+         FaultSpec("solve_fail", start_step=4, end_step=5)], seed=seed)
+    res = Resilience(injector=inj)
+    home = jnp.asarray(np.repeat(np.arange(R), E // R), jnp.int32)
+    cfg = balancer.BalancerConfig(mode="ultraep", n_slot=n_slot)
+    rng = np.random.default_rng(seed)
+
+    for step in range(steps):
+        inj.advance(step)
+        if step == 4:
+            res.last_good = None    # simulate a cold cache at fault time
+        lam = jnp.asarray(synth_load(rng, R, E), jnp.int32)
+
+        def solve_fn(lam=lam):
+            inj.check_solve(None)
+            return balancer.solve(lam, home, cfg)
+
+        plan = res.solve_with_ladder(solve_fn, lam, home, n_slot, None)
+        assert plan is not None
+    return dict(res.counters, solve_faults_fired=inj.fired["solve_fail"])
+
+
+def run(trials: int = 3, seed: int = 0, quiet: bool = False) -> dict:
+    rows = sweep(trials=trials, seed=seed, quiet=quiet)
+    at_half = [r for r in rows if r["severity"] == 0.5]
+    summary = {
+        "recovery_sev0.5": float(np.mean([r["recovery"] for r in at_half])),
+        "weighted_imbalance_health_sev0.5": float(np.mean(
+            [r["weighted_imbalance_health"] for r in at_half])),
+        "imbalance_pre_range": [
+            float(min(r["imbalance_pre"] for r in rows)),
+            float(max(r["imbalance_pre"] for r in rows))],
+        "imbalance_post_range": [
+            float(min(r["imbalance_post"] for r in rows)),
+            float(max(r["imbalance_post"] for r in rows))],
+    }
+    return {"sweep": rows, "ladder": ladder(seed=seed), "summary": summary}
+
+
+def main() -> None:
+    import json
+    import os
+
+    import jax
+    jax.config.update("jax_platforms", "cpu")
+
+    out = run()
+    s = out["summary"]
+    print(f"\nrecovery at severity 0.5: {s['recovery_sev0.5']:.2f}x "
+          f"(bar: >= 1.2x)")
+    print(f"ladder counters: {out['ladder']}")
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        os.pardir, "BENCH_fault.json")
+    with open(os.path.abspath(path), "w") as f:
+        json.dump(out, f, indent=2, default=float)
+        f.write("\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -2,9 +2,11 @@
 
 Prints a ``name,value,unit`` CSV summary at the end for machine parsing and
 writes ``BENCH_breakdown.json`` (per-stage dispatch/bucket/combine ms plus
-the fused-vs-reference pipeline speedup) and ``BENCH_comm.json`` (Fig. 16
-relay latencies plus the tiered intra/inter-rack bandwidth sweep) so the
-perf trajectory is recorded across PRs.
+the fused-vs-reference pipeline speedup), ``BENCH_comm.json`` (Fig. 16
+relay latencies plus the tiered intra/inter-rack bandwidth sweep) and
+``BENCH_fault.json`` (degraded-fabric sweep: health-weighted vs blind
+planning under a straggler rank, plus the degradation-ladder counters) so
+the perf trajectory is recorded across PRs.
 """
 
 from __future__ import annotations
@@ -21,8 +23,9 @@ def main() -> None:
     t0 = time.time()
     csv = []
 
-    from benchmarks import (bench_breakdown, bench_comm, bench_memory,
-                            bench_planner, bench_prefill, bench_training)
+    from benchmarks import (bench_breakdown, bench_comm, bench_fault,
+                            bench_memory, bench_planner, bench_prefill,
+                            bench_training)
 
     # -- Table 4 / Fig. 15: balancing quality ---------------------------
     rows = bench_planner.run(trials=3)
@@ -90,6 +93,20 @@ def main() -> None:
     with open(os.path.abspath(out_path), "w") as f:
         json.dump({k: (float(v) if isinstance(v, (int, float, np.floating))
                        else v) for k, v in br.items()}, f, indent=2)
+        f.write("\n")
+
+    # -- S13: degraded-fabric resilience ----------------------------------
+    fault = bench_fault.run(quiet=True)
+    fs = fault["summary"]
+    csv.append(("fault.recovery_sev0.5", f"{fs['recovery_sev0.5']:.2f}", "x"))
+    csv.append(("fault.weighted_imbalance_health_sev0.5",
+                f"{fs['weighted_imbalance_health_sev0.5']:.3f}", "ratio"))
+    csv.append(("fault.ladder.fallback_plans",
+                str(fault["ladder"]["fallback_plans"]), "count"))
+    fault_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                              os.pardir, "BENCH_fault.json")
+    with open(os.path.abspath(fault_path), "w") as f:
+        json.dump(fault, f, indent=2, default=float)
         f.write("\n")
 
     # -- Fig. 14: memory --------------------------------------------------

@@ -46,6 +46,14 @@ with ``# uep-lint: skip-file`` in its first ten lines):
                          scales) and no test that compares at tolerance
                          will catch the extra half-step of error
                          (DESIGN.md S12).
+* ``fallback-path``   -- no bare ``except:`` and no ``except Exception:`` /
+                         ``except BaseException:`` whose body only ``pass``es
+                         in ``repro`` code: the degradation ladder
+                         (DESIGN.md S13) depends on failures being *counted
+                         and degraded*, never silently swallowed -- a
+                         swallow-all handler turns an injected fault test
+                         into a false pass.  Handlers that actually do
+                         something (log, count, fall back) are fine.
 
 Functions are considered *traced* when their bodies reference ``jnp`` /
 ``jax.lax`` / ``jax.nn`` -- a deliberate over-approximation: host-side numpy
@@ -80,7 +88,7 @@ class LintViolation:
 
 
 RULES = ("axis-name", "host-sync", "float64-literal", "rack-loop",
-         "stage-boundary", "wire-dtype")
+         "stage-boundary", "wire-dtype", "fallback-path")
 
 # Canonical mesh-axis vocabulary: ParallelCtx defaults (batch_axes=("data",),
 # model_axis="model") plus the documented factored/mesh extras ("pod" FSDP
@@ -116,6 +124,10 @@ _F64_PATH_PARTS = ("kernels", "moe")
 # helpers themselves are exempt.
 _WIRE_PATH_PARTS = ("moe",)
 _WIRE_DTYPES_FLAGGED = ("int8", "bfloat16")
+
+# fallback-path applies to library code under repro/ (tests and tools may
+# legitimately probe with broad handlers).
+_FALLBACK_PATH_PARTS = ("repro",)
 
 # stage-boundary: engine primitives whose call sites are confined to the
 # staged execution layer and the engine modules themselves.  Keep in sync
@@ -231,12 +243,31 @@ def _wire_dtype_cast(call: ast.Call) -> str | None:
     return None
 
 
+def _swallows_all(handler: ast.ExceptHandler) -> str | None:
+    """Why an except handler is a silent swallow-all, or None if it isn't."""
+    if handler.type is None:
+        return "bare except:"
+    names = []
+    types = handler.type.elts if isinstance(handler.type,
+                                            (ast.Tuple, ast.List)) \
+        else [handler.type]
+    for t in types:
+        d = _dotted(t)
+        names.append(d.rsplit(".", 1)[-1] if d else "")
+    if not any(n in ("Exception", "BaseException") for n in names):
+        return None
+    if all(isinstance(s, ast.Pass) for s in handler.body):
+        return f"except {'/'.join(filter(None, names))}: pass"
+    return None
+
+
 class _FileLinter:
     def __init__(self, path: str, tree: ast.Module, check_f64: bool,
-                 check_wire: bool = False):
+                 check_wire: bool = False, check_fallback: bool = False):
         self.path = path
         self.check_f64 = check_f64
         self.check_wire = check_wire
+        self.check_fallback = check_fallback
         self.check_stage = not _stage_exempt(path)
         self.tree = tree
         self.found: dict[tuple[int, int, str], LintViolation] = {}
@@ -278,6 +309,15 @@ class _FileLinter:
                             "repro.core.quantize codec (encode_wire/"
                             "decode_wire); an ad-hoc cast double-quantizes "
                             "already-encoded payloads")
+            if self.check_fallback and isinstance(node, ast.ExceptHandler):
+                why = _swallows_all(node)
+                if why is not None:
+                    self.emit(
+                        node, "fallback-path",
+                        f"{why} silently swallows failures; the degradation "
+                        "ladder (DESIGN.md S13) requires faults to be "
+                        "counted and degraded -- catch the specific "
+                        "exception, or count/fall back in the handler")
             if self.check_f64 and _is_f64(node):
                 self.emit(node, "float64-literal",
                           "float64 in kernel/moe code: TPUs have no f64 "
@@ -349,7 +389,8 @@ def lint_source(source: str, path: str = "<string>") -> list[LintViolation]:
     tree = ast.parse(source, filename=path)
     check_f64 = any(part in _F64_PATH_PARTS for part in Path(path).parts)
     check_wire = any(part in _WIRE_PATH_PARTS for part in Path(path).parts)
-    found = _FileLinter(path, tree, check_f64, check_wire).run()
+    check_fb = any(part in _FALLBACK_PATH_PARTS for part in Path(path).parts)
+    found = _FileLinter(path, tree, check_f64, check_wire, check_fb).run()
     return [v for v in found if not _suppressed(lines, v)]
 
 

@@ -24,7 +24,16 @@ Checked invariants (rule ids):
                                 expert-id order within the slot budget.
 * ``threshold-bounds``       -- ``post_max == max rank load``, ``pre_max ==
                                 max home load``, ``post_max <= tau <=
-                                pre_max``.
+                                pre_max`` (health-weighted solves use a
+                                wider bound: tau is in full-speed-rank
+                                units, see ``health-capacity``).
+* ``health-capacity``        -- (with ``health_weight=``) every rank's load
+                                fits its health-scaled capacity
+                                ``floor(tau * w_r)``: a plan that ignores a
+                                slow rank's weight is rejected.
+* ``health-quarantine``      -- (with ``health_weight=``) quarantined ranks
+                                (weight 0) host no quota and receive no
+                                rerouted token: the rank fully drains.
 * ``tier-accounting``        -- ``tier_tokens`` / ``tier_replicas`` match the
                                 reroute matrix and placement under the given
                                 topology, and their sums match the totals.
@@ -203,6 +212,7 @@ def verify_plan(
     lam: np.ndarray | None = None,
     home: np.ndarray | None = None,
     rack_aware_mode: bool | None = None,
+    health_weight: Any = None,
 ) -> list[Violation]:
     """Statically verify a solved plan; returns all violations found.
 
@@ -221,6 +231,13 @@ def verify_plan(
         optimality check at "warn" severity; ``True`` promotes it to an
         error; ``False`` skips it (the EPLB baselines' documented
         discrepancy -- see DESIGN.md S10).
+      health_weight: optional (R,) per-rank throughput weights the plan was
+        solved with.  Switches the threshold check to full-speed-rank units
+        and adds the ``health-capacity`` / ``health-quarantine`` rules: load
+        must fit ``floor(tau * w_r)`` per rank and weight-0 ranks must be
+        fully drained.  An infeasible health solve that fell back to home
+        placement therefore *fails* verification -- by design, so the
+        degradation ladder can catch it and fall back.
     """
     out: list[Violation] = []
     q = _np(plan.q).astype(np.int64)
@@ -356,10 +373,54 @@ def verify_plan(
         out.append(Violation(
             "threshold-bounds",
             f"pre_max={pre_max} != max pre-balance rank load {pre}"))
-    if not (post <= tau <= max(pre, post)):
-        out.append(Violation(
-            "threshold-bounds",
-            f"tau={tau} outside [post_max={post}, pre_max={pre}]"))
+    if health_weight is None:
+        if not (post <= tau <= max(pre, post)):
+            out.append(Violation(
+                "threshold-bounds",
+                f"tau={tau} outside [post_max={post}, pre_max={pre}]"))
+    else:
+        w = _np(health_weight).astype(np.float64).reshape(-1)
+        if w.shape[0] != R:
+            out.append(Violation(
+                "shape",
+                f"health_weight has {w.shape[0]} entries, expected R={R}"))
+        else:
+            # Mirror the solver's normalization: fastest rank == 1.0,
+            # degenerate all-zero weights fall back to uniform.
+            wmax = float(w.max())
+            w = w / wmax if wmax > 0 else np.ones(R)
+            total = int(lam_e.sum())
+            # tau counts the load of a hypothetical full-speed rank; with a
+            # slow rank in the mix it legitimately exceeds post_max (the
+            # slow rank caps at floor(tau*w) < tau) up to the whole load.
+            if not (post <= tau <= max(pre, post, total)):
+                out.append(Violation(
+                    "threshold-bounds",
+                    f"tau={tau} outside the health-weighted bound "
+                    f"[post_max={post}, max(pre, post, total)="
+                    f"{max(pre, post, total)}]"))
+            cap = np.floor(tau * w).astype(np.int64)
+            load = u.sum(axis=0)
+            over = load > cap
+            if over.any():
+                r = int(np.argmax(load - cap))
+                out.append(Violation(
+                    "health-capacity",
+                    f"rank {r} carries {int(load[r])} token(s) > its "
+                    f"health capacity floor(tau*w)={int(cap[r])} "
+                    f"(w={w[r]:.3f}): the quota table ignores the rank's "
+                    "health weight"))
+            quarantined = np.where(w <= 0)[0]
+            for r in quarantined:
+                hosted_load = int(u[:, r].sum())
+                routed_in = int(q[:, :, r].sum())
+                if hosted_load or routed_in:
+                    out.append(Violation(
+                        "health-quarantine",
+                        f"rank {int(r)} is quarantined (weight 0) but "
+                        f"hosts {hosted_load} token(s) of quota and "
+                        f"receives {routed_in} rerouted token(s): the "
+                        "rank must fully drain"))
 
     # --- topology tiers ---------------------------------------------------
     rack_size = None
@@ -564,7 +625,8 @@ def _is_traced(*arrays: Any) -> bool:
 
 
 def verify_solved(plan: Any, *, lam: Any, home: Any,
-                  rack_size: int | None, mode: str) -> None:
+                  rack_size: int | None, mode: str,
+                  health_weight: Any = None) -> None:
     """Balancer-side hook body: verify when enabled and concrete."""
     if not verification_enabled():
         return
@@ -580,7 +642,10 @@ def verify_solved(plan: Any, *, lam: Any, home: Any,
     # through the rack-local reroute tier and must meet the bound exactly
     # (DESIGN.md S10).
     rack_aware = None if mode in ("eplb", "eplb_plus") else True
+    if health_weight is not None and _is_traced(health_weight):
+        health_weight = None
     bad = errors(verify_plan(plan, topo, lam=lam, home=home,
-                             rack_aware_mode=rack_aware))
+                             rack_aware_mode=rack_aware,
+                             health_weight=health_weight))
     if bad:
         raise PlanViolationError(bad)

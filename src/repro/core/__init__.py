@@ -1,6 +1,7 @@
 """UltraEP core: quota-driven planning, reroute, baselines, comm planning."""
 
 from repro.core.balancer import BalancerConfig, no_balance_plan, solve
+from repro.core.health import HealthConfig, RankHealth
 from repro.core.layout import ExpertLayout
 from repro.core.planner import (
     Plan,
@@ -19,7 +20,9 @@ from repro.core.topology import Topology
 __all__ = [
     "BalancerConfig",
     "ExpertLayout",
+    "HealthConfig",
     "Plan",
+    "RankHealth",
     "Topology",
     "cumulative_quota",
     "no_balance_plan",

@@ -78,6 +78,7 @@ def solve(
     *,
     lam_e_est: jax.Array | None = None,
     rack_size: int | None = None,
+    health_weight: jax.Array | None = None,
 ) -> Plan:
     """Dispatch on ``cfg.mode``.  Jittable for all non-lplb modes.
 
@@ -90,17 +91,24 @@ def solve(
     matching tier; and all plans export per-tier transfer volumes.  The EPLB
     baselines keep their own round-robin reroute (topology-aware EPLB is a
     deferred follow-on, see ROADMAP) but still report tier volumes.
+
+    ``health_weight`` ((R,) per-rank relative throughput, see
+    :class:`repro.core.health.RankHealth`) is honored only by
+    ``mode="ultraep"``, whose quota search natively supports per-rank
+    capacities; the baselines are *health-blind* (like the topology-blind
+    EPLB reroute, a documented baseline limitation) and ignore it.
     """
     lam = lam.astype(_I32)
     home = home.astype(_I32)
     R, E = lam.shape
 
-    def _checked(plan: Plan) -> Plan:
+    def _checked(plan: Plan, *, health: jax.Array | None = None) -> Plan:
         # Opt-in static verification (repro.analysis.plan_check): no-op
         # unless enabled via plan_verification(), and skipped for traced
         # plans (the verifier needs concrete values).
         _plan_check.verify_solved(plan, lam=lam, home=home,
-                                  rack_size=rack_size, mode=cfg.mode)
+                                  rack_size=rack_size, mode=cfg.mode,
+                                  health_weight=health)
         return plan
 
     if cfg.mode in ("none", "ideal"):
@@ -116,7 +124,8 @@ def solve(
             max_replicas_per_expert=cfg.max_replicas_per_expert,
             probe_parallelism=cfg.probe_parallelism,
             rack_size=rack_size,
-        ))
+            health_weight=health_weight,
+        ), health=health_weight)
 
     if cfg.mode in ("eplb", "eplb_plus"):
         est = lam.sum(axis=0).astype(jnp.float32)

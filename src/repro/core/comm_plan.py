@@ -72,6 +72,25 @@ class RelaySchedule:
         return int(self.send_volume.max()) if self.send_volume.size else 0
 
 
+def _speed_vec(rank_speed, R: int) -> np.ndarray | None:
+    """Validate and clamp a per-rank channel speed vector (None passthrough).
+
+    Speeds are relative factors in (0, 1]; a degraded rank's channel takes
+    1/speed times longer per chunk.  Zero speeds are clamped to 1e-3 -- a
+    fully dead rank should not appear in schedules at all (the
+    health-weighted planner drains it), but the simulator must stay finite
+    if one does.
+    """
+    if rank_speed is None:
+        return None
+    s = np.asarray(rank_speed, dtype=np.float64).reshape(-1)
+    if s.shape[0] != R:
+        raise ValueError(f"rank_speed has {s.shape[0]} entries, expected {R}")
+    if (s < 0).any() or not np.isfinite(s).all():
+        raise ValueError("rank_speed entries must be finite and >= 0")
+    return np.clip(s, 1e-3, None)
+
+
 def build_relay_schedule(
     hosted: np.ndarray,
     home: np.ndarray,
@@ -80,6 +99,7 @@ def build_relay_schedule(
     relay_threshold: int = 3,
     num_ranks: int | None = None,
     topology: Topology | None = None,
+    rank_speed=None,
 ) -> RelaySchedule:
     """Load-aware relay-tree construction (paper S6.2).
 
@@ -97,6 +117,10 @@ def build_relay_schedule(
         load-aware across the home and already-fed rack-relays (a broadcast
         tree over racks), so no single sender serialises the scale-out hop;
         chunk pipelining in :func:`simulate` hides the added tree depth.
+      rank_speed: optional (R,) per-rank channel speed factors in (0, 1]
+        (see :class:`repro.core.health.RankHealth`): a 0.5x rank's channel
+        time doubles, so the load-aware trackers route relay duty *around*
+        degraded ranks instead of onto them.  ``None`` = all full speed.
 
     Returns a :class:`RelaySchedule` with per-chunk dependencies encoded at
     edge granularity (chunk pipelining is applied by :func:`simulate`).
@@ -105,6 +129,7 @@ def build_relay_schedule(
     home = np.asarray(home, dtype=np.int64)
     E, R = hosted.shape
     R = num_ranks or R
+    speed = _speed_vec(rank_speed, R)
 
     send_volume = np.zeros(R, dtype=np.int64)
     edges: list[Edge] = []
@@ -123,7 +148,11 @@ def build_relay_schedule(
 
         def edge_secs(a: int, b: int) -> float:
             al, beta = topology.link(a, b)
-            return al + expert_bytes / beta
+            secs = al + expert_bytes / beta
+            if speed is not None:
+                # The slowest endpoint gates the transfer.
+                secs /= min(speed[a], speed[b])
+            return secs
 
         def add_edge(f_rank: int, t: int, e: int, stage: int,
                      dep: int) -> int:
@@ -199,11 +228,17 @@ def build_relay_schedule(
 
     # Pass 2: relay-eligible hot experts, descending fan-out.
     replica_sets.sort(key=lambda it: (-len(it[1]), it[0]))
+    # Effective relay cost: planned bytes scaled by the rank's channel
+    # slowdown, so a half-speed rank looks twice as loaded and relay duty
+    # routes around it.
+    _eff = ((lambda r, v: v / speed[r]) if speed is not None
+            else (lambda r, v: v))
     for e, dsts in replica_sets:
         fanout = len(dsts)
         n_relay = max(1, min(fanout, round(math.sqrt(fanout))))
         # Relays: replica ranks with the smallest current send volume.
-        order = sorted(dsts.tolist(), key=lambda t: (send_volume[t], t))
+        order = sorted(dsts.tolist(),
+                       key=lambda t: (_eff(t, send_volume[t]), t))
         relays = order[:n_relay]
         leaves = order[n_relay:]
 
@@ -217,7 +252,7 @@ def build_relay_schedule(
         # Leaves attach to the relay whose projected volume stays smallest.
         proj = {t: send_volume[t] for t in relays}
         for leaf in leaves:
-            t = min(relays, key=lambda x: (proj[x], x))
+            t = min(relays, key=lambda x: (_eff(x, proj[x]), x))
             edges.append(
                 Edge(int(t), int(leaf), e, expert_bytes, 1, relay_edge_idx[t])
             )
@@ -257,6 +292,7 @@ def simulate(
     alpha: float = 2e-6,
     chunk_bytes: int = 1 << 20,
     topology: Topology | None = None,
+    rank_speed=None,
     return_stats: bool = False,
 ) -> float | tuple[float, SimStats]:
     """Event-driven chunk-level alpha-beta simulation of the schedule.
@@ -270,12 +306,18 @@ def simulate(
     ``intra_alpha/intra_beta``, inter-rack edges ``inter_alpha/inter_beta``)
     and the flat ``alpha``/``link_bandwidth`` arguments are ignored.
 
+    ``rank_speed`` ((R,) factors in (0, 1], None = full speed) stretches a
+    chunk's channel occupancy by ``1 / min(speed[src], speed[dst])``: the
+    degraded-fabric counterpart of the scheduler's speed-aware trackers, so
+    the same vector prices both planning and simulation.
+
     Returns the makespan in seconds; with ``return_stats=True``, returns
     ``(makespan, SimStats)`` where the per-edge completion times feed the
     tiered-bandwidth benchmark (Fig. 16-style trajectory).
     """
     send_free = np.zeros(num_ranks)
     recv_free = np.zeros(num_ranks)
+    speed = _speed_vec(rank_speed, num_ranks)
 
     def link(e: Edge) -> tuple[float, float]:
         if topology is None:
@@ -313,7 +355,10 @@ def simulate(
         a, beta = link(e)
         this_bytes = min(chunk_bytes, e.nbytes - c * chunk_bytes)
         start = max(ready, send_free[e.src], recv_free[e.dst])
-        finish = start + a + this_bytes / beta
+        secs = a + this_bytes / beta
+        if speed is not None:
+            secs /= min(speed[e.src], speed[e.dst])
+        finish = start + secs
         send_free[e.src] = finish
         recv_free[e.dst] = finish
         edge_finish[i] = max(edge_finish[i], finish)

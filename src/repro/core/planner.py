@@ -80,6 +80,7 @@ def _greedy_oracle(
     u_min: int,
     max_replicas_per_expert: int,
     rack_size: int | None = None,
+    w: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """One feasibility probe (Alg. 1 lines 6-19).  Returns (feasible, u).
 
@@ -90,14 +91,24 @@ def _greedy_oracle(
     step transfers the same delta either way), so the probe's progress is
     preserved; on a one-rack topology the bonus is uniform and the oracle is
     bit-identical to the flat one.
+
+    ``w`` (normalized per-rank health weights, max == 1.0) turns the scalar
+    threshold into a per-rank capacity ``cap_r = floor(tau * w_r)``: tau then
+    denotes the load of a *full-speed* rank and every slower rank is packed
+    to a proportionally smaller quota; a quarantined rank (w == 0) has zero
+    capacity, so its home load is all excess and no replica lands on it.
     """
     E = lam_e.shape[0]
     R = ell.shape[0]
     epr = E // R
     rank_rack = jnp.arange(R, dtype=_I32) // (rack_size or R)  # (R,)
 
-    exc0 = jnp.maximum(ell - tau, 0).astype(_I32)
-    slk0 = jnp.maximum(tau - ell, 0).astype(_I32)
+    if w is None:
+        cap = jnp.full((R,), tau, _I32)
+    else:
+        cap = jnp.floor(tau.astype(jnp.float32) * w).astype(_I32)
+    exc0 = jnp.maximum(ell - cap, 0).astype(_I32)
+    slk0 = jnp.maximum(cap - ell, 0).astype(_I32)
     u0 = (jax.nn.one_hot(home, R, dtype=_I32).T * lam_e).T.astype(_I32)  # (E,R)
     hosted0 = jax.nn.one_hot(home, R, dtype=jnp.bool_)  # (E,R) -> transpose later
     rank_order = jnp.argsort(-exc0, stable=True).astype(_I32)
@@ -184,6 +195,7 @@ def solve_replication(
     max_replicas_per_expert: int | None = None,
     probe_parallelism: int = 1,
     rack_size: int | None = None,
+    health_weight: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Solve the quota table U by threshold binary search (Alg. 1 lines 1-25).
 
@@ -198,6 +210,15 @@ def solve_replication(
         (TPU analogue of the paper's warp-parallel probing).
       rack_size: ranks per rack of a two-level topology; slack ties in the
         greedy oracle then prefer intra-rack replica placement.  None = flat.
+      health_weight: optional (R,) per-rank relative throughput (see
+        :class:`repro.core.health.RankHealth`).  Weights are normalized so
+        the fastest rank is 1.0 and each probe's capacity becomes
+        ``floor(tau * w_r)``: a 0.5x-speed rank is packed to ~half the
+        quota, a quarantined rank (weight 0) drains to zero and its home
+        experts replicate away.  ``None`` is bit-identical to the unweighted
+        solve.  Degenerate all-zero weights fall back to uniform.  Note tau
+        is then in *full-speed-rank* units, so it can legitimately exceed
+        ``post_max`` -- the plan checker accounts for this.
 
     Returns:
       (u, tau): quota table (E, R) int32 and the solved threshold.
@@ -217,9 +238,24 @@ def solve_replication(
     rank_experts = _expert_order(lam_e, home, R)
 
     total = ell.sum()
-    tau_lo0 = -(-total // R)  # ceil of mean rank load
-    tau_hi0 = jnp.max(ell)
     u_init = (jax.nn.one_hot(home, R, dtype=_I32).T * lam_e).T.astype(_I32)
+
+    w = None
+    if health_weight is not None:
+        w_raw = jnp.asarray(health_weight, jnp.float32).reshape(R)
+        wmax = jnp.max(w_raw)
+        w = jnp.where(wmax > 0, w_raw / jnp.maximum(wmax, 1e-12),
+                      jnp.ones((R,), jnp.float32))
+        # ceil(total / sum(w)) lower-bounds the full-speed-rank threshold;
+        # a weighted solve may need tau far above max(ell) (slow ranks hold
+        # floor(tau*w) < tau each), so the upper bound widens to total.
+        tau_lo0 = jnp.ceil(
+            total.astype(jnp.float32) / jnp.maximum(w.sum(), 1e-12)
+        ).astype(_I32)
+        tau_hi0 = jnp.maximum(total, jnp.max(ell))
+    else:
+        tau_lo0 = -(-total // R)  # ceil of mean rank load
+        tau_hi0 = jnp.max(ell)
 
     oracle = functools.partial(
         _greedy_oracle,
@@ -231,6 +267,7 @@ def solve_replication(
         u_min=u_min,
         max_replicas_per_expert=max_rep,
         rack_size=rack_size,
+        w=w,
     )
 
     if P == 1:
@@ -470,12 +507,17 @@ def solve_plan(
     max_replicas_per_expert: int | None = None,
     probe_parallelism: int = 1,
     rack_size: int | None = None,
+    health_weight: jax.Array | None = None,
 ) -> Plan:
     """Full Alg. 1: replication + reroute + slot map + imbalance metrics.
 
     ``rack_size`` (ranks per rack) switches on the rack-aware solve mode:
     intra-rack-preferring replica placement, the rack-local reroute tier, and
     per-tier transfer volume accounting exported on the plan.
+
+    ``health_weight`` (see :func:`solve_replication`) scales each rank's
+    probe capacity by its relative throughput, so quotas -- and hence
+    ``token_targets`` -- follow per-rank health.
     """
     lam = lam.astype(_I32)
     home = home.astype(_I32)
@@ -488,6 +530,7 @@ def solve_plan(
         max_replicas_per_expert=max_replicas_per_expert,
         probe_parallelism=probe_parallelism,
         rack_size=rack_size,
+        health_weight=health_weight,
     )
     q = solve_reroute(lam, u, locality=locality, rack_size=rack_size)
     x = slot_assignment(u, home, n_slot)

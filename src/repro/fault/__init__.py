@@ -1,0 +1,19 @@
+"""Deterministic fault injection for degraded-fabric testing (DESIGN.md S13)."""
+
+from repro.fault.injector import (
+    FAULT_KINDS,
+    FaultInjector,
+    FaultSpec,
+    PlannerFault,
+    SolveTimeout,
+    TransferFault,
+)
+
+__all__ = [
+    "FAULT_KINDS",
+    "FaultInjector",
+    "FaultSpec",
+    "PlannerFault",
+    "SolveTimeout",
+    "TransferFault",
+]

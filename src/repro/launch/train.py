@@ -89,9 +89,9 @@ def train(arch: str, *, steps: int = 100, batch: int = 8, seq: int = 128,
         step_fn, batch_fn)
     print(f"arch={cfg.name} params={param_count(params):,} "
           f"balancer={balancer}", flush=True)
-    t0 = time.time()
+    t0 = time.monotonic()
     state, final_step = sup.run(state, 0, steps, on_metrics=_metrics)
-    dt = time.time() - t0
+    dt = time.monotonic() - t0
     print(f"done: {final_step} steps in {dt:.1f}s "
           f"({steps / dt:.2f} steps/s); final loss {losses[-1]:.4f}")
     return losses

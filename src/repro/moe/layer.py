@@ -203,6 +203,7 @@ def moe_layer_local(
     axis_name: str | tuple[str, str] | None,
     router_bias: jax.Array | None = None,
     lam_e_est: jax.Array | None = None,
+    resilience=None,
 ) -> tuple[jax.Array, jax.Array, MoEStats]:
     """One balanced MoE layer, per-rank view (call under shard_map).
 
@@ -220,9 +221,13 @@ def moe_layer_local(
         (R must be 1).
       router_bias: optional (E,) aux-free routing bias.
       lam_e_est: optional stale per-expert load estimate (EPLB mode).
+      resilience: optional :class:`repro.moe.stages.Resilience` -- health-
+        weighted planning, the degradation ladder, and payload screening
+        (DESIGN.md S13).
 
     Returns:
       (y, aux_loss, stats) with y: (T_local, D).
     """
     return run_staged_moe(x, params, cfg, axis_name=axis_name,
-                          router_bias=router_bias, lam_e_est=lam_e_est)
+                          router_bias=router_bias, lam_e_est=lam_e_est,
+                          resilience=resilience)

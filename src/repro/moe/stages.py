@@ -34,13 +34,17 @@ capacities (tests/test_stages.py).
 
 from __future__ import annotations
 
+import dataclasses
+import time
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.analysis.plan_check import PlanViolationError
 from repro.core import balancer as balancer_mod
 from repro.core.layout import physical_slot_of
+from repro.fault.injector import PlannerFault, SolveTimeout, TransferFault
 from repro.core.planner import token_targets
 from repro.core.quantize import (
     decode_wire,
@@ -75,6 +79,8 @@ __all__ = [
     "PlanState",
     "DistributeState",
     "DispatchState",
+    "ResilienceConfig",
+    "Resilience",
     "make_stage_ctx",
     "gate_stage",
     "plan_stage",
@@ -82,6 +88,7 @@ __all__ = [
     "dispatch_stage",
     "compute_stage",
     "combine_stage",
+    "screen_payload",
     "chunk_bounds",
     "chunk_occ_offsets",
     "run_staged_moe",
@@ -104,6 +111,15 @@ class MoEStats(NamedTuple):
                                 #    per tier = tier_tokens * the per-item
                                 #    payload width of cfg.wire_dtype
                                 #    (repro.core.quantize, DESIGN.md S12)
+    # Resilience counters (populated when run with a Resilience; DESIGN.md
+    # S13).  fallback_plans counts degradation-ladder activations of THIS
+    # call (solve -> last-good -> no-balance, plus transfer-exhaustion
+    # downgrades); dropped_payload_tokens counts NaN/Inf payload rows
+    # screened out at stage boundaries; quarantined_ranks mirrors the
+    # health state the plan was solved under.
+    fallback_plans: jax.Array | None = None          # () int32
+    dropped_payload_tokens: jax.Array | None = None  # () int32
+    quarantined_ranks: jax.Array | None = None       # () int32
 
 
 class StageCtx(NamedTuple):
@@ -162,6 +178,157 @@ class DispatchState(NamedTuple):
                          #    wire scales when wire_dtype == ffn_dtype ==
                          #    "int8": the slot buffers stay encoded and feed
                          #    the w8a8 kernel directly (no dequant round-trip)
+
+
+# --------------------------------------------------------------------------
+# Resilience: graceful-degradation ladder + payload screening (DESIGN.md S13)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ResilienceConfig:
+    """Knobs of the degradation ladder.
+
+    ``solve_deadline_s`` bounds the *host-side* wall time of one eager plan
+    solve; exceeding it is treated as a solve failure (under jit the solve
+    is traced, not timed -- the deadline is an eager/serving-path guard).
+    ``max_transfer_retries`` bounds retry of *transient* transfer faults,
+    each backed off by ``retry_backoff_s * 2**attempt`` seconds.
+    ``screen_payloads`` switches the NaN/Inf stage-boundary screen.
+    """
+
+    solve_deadline_s: float | None = None
+    max_transfer_retries: int = 2
+    retry_backoff_s: float = 0.0
+    screen_payloads: bool = True
+
+
+class Resilience:
+    """Host-side resilience state threaded through one MoE layer's stages.
+
+    Holds the fault injector (optional), the rank-health state feeding the
+    planner (optional), the last-good plan cache, and the fault counters.
+    The degradation ladder it implements in :meth:`solve_with_ladder`:
+
+        solve (health-weighted)  -- normal path; concrete plans are cached
+          |  PlannerFault / SolveTimeout / PlanViolationError
+          v
+        last-good cached plan    -- stale but valid; quotas may clamp
+          |  no cached plan of matching shape
+          v
+        no_balance_plan          -- home routing, never fails, never stalls
+
+    All ladder logic runs at host/trace time: a compiled JAX step cannot
+    raise mid-flight, so faults are decided where the step is *built*.  The
+    plan cache stores only concrete (eager) plans -- a traced plan is a
+    graph value of one trace and cannot be replayed into another step.
+    """
+
+    def __init__(self, cfg: ResilienceConfig = ResilienceConfig(), *,
+                 injector=None, health=None, layer: int | None = None):
+        self.cfg = cfg
+        self.injector = injector
+        self.health = health
+        self.layer = layer
+        self.last_good = None
+        self.last_error: Exception | None = None
+        self.counters = {
+            "fallback_plans": 0,       # ladder activations (any rung)
+            "last_good_reuses": 0,     # rung 2 hits
+            "no_balance_fallbacks": 0,  # rung 3 hits
+            "transfer_retries": 0,     # transient transfer faults retried
+            "transfer_fallbacks": 0,   # retry budget exhausted
+        }
+
+    # -- planner rung ------------------------------------------------------
+
+    def health_weight(self) -> jax.Array | None:
+        if self.health is None:
+            return None
+        return jnp.asarray(self.health.planner_weights(), jnp.float32)
+
+    def num_quarantined(self) -> int:
+        return 0 if self.health is None else self.health.num_quarantined
+
+    def solve_with_ladder(self, solve_fn, lam: jax.Array, home: jax.Array,
+                          n_slot: int, rack_size: int | None):
+        """Run ``solve_fn`` through the ladder; always returns a plan."""
+        try:
+            plan = solve_fn()
+        except (PlannerFault, PlanViolationError) as e:
+            self.last_error = e
+            self.counters["fallback_plans"] += 1
+            cached = self.last_good
+            if cached is not None and cached.u.shape == (lam.shape[1],
+                                                         lam.shape[0]):
+                self.counters["last_good_reuses"] += 1
+                return cached
+            self.counters["no_balance_fallbacks"] += 1
+            return balancer_mod.no_balance_plan(lam, home, n_slot, rack_size)
+        if not isinstance(plan.u, jax.core.Tracer):
+            self.last_good = plan
+        return plan
+
+    # -- transfer rung -----------------------------------------------------
+
+    def guard_transfer(self) -> None:
+        """Bounded retry+backoff over transient transfer faults.
+
+        Returns normally when the transfer may proceed; re-raises the
+        :class:`TransferFault` when it is permanent or the retry budget is
+        exhausted (the caller then downgrades to a replica-free plan).
+        """
+        if self.injector is None:
+            return
+        attempts = self.cfg.max_transfer_retries + 1
+        for attempt in range(attempts):
+            try:
+                self.injector.check_transfer(self.layer)
+                return
+            except TransferFault as e:
+                self.last_error = e
+                if not e.transient or attempt == attempts - 1:
+                    self.counters["transfer_fallbacks"] += 1
+                    raise
+                self.counters["transfer_retries"] += 1
+                if self.cfg.retry_backoff_s > 0:
+                    time.sleep(self.cfg.retry_backoff_s * (2 ** attempt))
+
+    def __repr__(self) -> str:
+        live = {k: v for k, v in self.counters.items() if v}
+        return f"Resilience(layer={self.layer}, counters={live})"
+
+
+def screen_payload(xs: jax.Array, valid: jax.Array
+                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Drop non-finite payload rows at a stage boundary.
+
+    Returns ``(xs, valid, n_dropped)`` where corrupted rows are zeroed AND
+    invalidated.  Zeroing matters independently of the mask: the grouped
+    FFN multiplies invalid rows by 0, and ``NaN * 0 == NaN`` would leak the
+    corruption straight through the mask.  Integer buffers (int8 wire
+    codes) pass through -- they cannot encode NaN.
+    """
+    if not jnp.issubdtype(xs.dtype, jnp.inexact):
+        return xs, valid, jnp.zeros((), _I32)
+    finite = jnp.isfinite(xs).all(axis=-1)
+    dropped = (valid & ~finite).sum().astype(_I32)
+    xs = jnp.where(finite[..., None], xs, 0)
+    return xs, valid & finite, dropped
+
+
+def _screen_rows(y: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Zero non-finite output rows; returns ``(y, n_dropped)``.
+
+    The combine-side twin of :func:`screen_payload`: a token whose combined
+    MoE output went non-finite (corrupted replica weights, FFN overflow)
+    contributes zero to the residual stream instead of poisoning it.
+    """
+    if not jnp.issubdtype(y.dtype, jnp.inexact):
+        return y, jnp.zeros((), _I32)
+    finite = jnp.isfinite(y).all(axis=-1)
+    dropped = (~finite).sum().astype(_I32)
+    return jnp.where(finite[:, None], y, 0), dropped
 
 
 def make_stage_ctx(cfg, axis_name) -> StageCtx:
@@ -244,12 +411,42 @@ def gate_stage(ctx: StageCtx, x: jax.Array, router: jax.Array,
 
 
 def plan_stage(ctx: StageCtx, gs: GateState, *,
-               lam_e_est: jax.Array | None = None) -> PlanState:
-    """Solve the balancer on the FULL-batch load (once per microbatch)."""
+               lam_e_est: jax.Array | None = None,
+               resilience: Resilience | None = None) -> PlanState:
+    """Solve the balancer on the FULL-batch load (once per microbatch).
+
+    With ``resilience``, the solve runs health-weighted (quotas follow
+    per-rank throughput) and through the degradation ladder: a raised
+    :class:`~repro.fault.injector.PlannerFault`, a deadline overrun, or a
+    plan failing static verification falls back to the last-good cached
+    plan, then to :func:`~repro.core.balancer.no_balance_plan` -- the stage
+    never stalls the step.
+    """
     cfg = ctx.cfg
     layout = cfg.layout
-    plan = balancer_mod.solve(gs.lam, layout.home(), cfg.balancer,
-                              lam_e_est=lam_e_est, rack_size=cfg.rack_size)
+    home = layout.home()
+    res = resilience
+    health_weight = None if res is None else res.health_weight()
+
+    def _solve():
+        if res is not None and res.injector is not None:
+            res.injector.check_solve(res.layer)
+        t0 = time.monotonic()
+        plan = balancer_mod.solve(gs.lam, home, cfg.balancer,
+                                  lam_e_est=lam_e_est,
+                                  rack_size=cfg.rack_size,
+                                  health_weight=health_weight)
+        deadline = None if res is None else res.cfg.solve_deadline_s
+        if deadline is not None and time.monotonic() - t0 > deadline:
+            raise SolveTimeout(
+                f"plan solve exceeded {deadline}s deadline")
+        return plan
+
+    if res is None:
+        plan = _solve()
+    else:
+        plan = res.solve_with_ladder(_solve, gs.lam, home,
+                                     cfg.balancer.n_slot, cfg.rack_size)
     return PlanState(plan=plan, slot_of_all=physical_slot_of(layout, plan.x))
 
 
@@ -265,6 +462,39 @@ def distribute_stage(ctx: StageCtx, params, gs: GateState,
         w1_all=jnp.concatenate([params.w1, w1r], axis=0),
         w3_all=jnp.concatenate([params.w3, w3r], axis=0),
         w2_all=jnp.concatenate([params.w2, w2r], axis=0))
+
+
+def _distribute_with_ladder(
+    ctx: StageCtx, params, gs: GateState, ps: PlanState,
+    res: Resilience | None,
+) -> tuple[PlanState, DistributeState]:
+    """Replica streaming under the ladder: retry transients, else downgrade.
+
+    A transfer fault that survives the bounded retry budget downgrades the
+    whole layer to :func:`~repro.core.balancer.no_balance_plan` -- a
+    replica-free plan needs no transfer at all -- rather than dispatching
+    tokens to replicas whose weights never arrived.  Injected replica
+    corruption (``transfer_corrupt``) is applied to the streamed slots
+    only; the resulting NaN outputs are caught by the combine-side screen.
+    """
+    if res is None:
+        return ps, distribute_stage(ctx, params, gs, ps)
+    cfg = ctx.cfg
+    try:
+        res.guard_transfer()
+    except TransferFault:
+        res.counters["fallback_plans"] += 1
+        plan = balancer_mod.no_balance_plan(
+            gs.lam, cfg.layout.home(), cfg.balancer.n_slot, cfg.rack_size)
+        ps = PlanState(plan=plan,
+                       slot_of_all=physical_slot_of(cfg.layout, plan.x))
+    dist = distribute_stage(ctx, params, gs, ps)
+    if res.injector is not None:
+        n_main = cfg.layout.experts_per_rank
+        w1r = res.injector.corrupt_replicas(dist.w1_all[n_main:], res.layer)
+        dist = dist._replace(
+            w1_all=jnp.concatenate([dist.w1_all[:n_main], w1r], axis=0))
+    return ps, dist
 
 
 # --------------------------------------------------------------------------
@@ -458,6 +688,7 @@ def run_staged_moe(
     axis_name: str | tuple[str, str] | None,
     router_bias: jax.Array | None = None,
     lam_e_est: jax.Array | None = None,
+    resilience: Resilience | None = None,
 ) -> tuple[jax.Array, jax.Array, MoEStats]:
     """One balanced MoE layer as a staged, optionally chunk-overlapped run.
 
@@ -466,12 +697,24 @@ def run_staged_moe(
     pipelined so chunk i+1's dispatch (and its all_to_all) is issued before
     chunk i's FFN + combine -- under XLA's latency-hiding scheduler the
     wire of the next chunk overlaps the compute of the current one.
+
+    With ``resilience`` (DESIGN.md S13) the layer runs degraded-fabric
+    hardened: the plan solve is health-weighted and falls down the
+    degradation ladder instead of raising; replica streaming retries
+    transient faults and downgrades to a replica-free plan on exhaustion;
+    dispatched payloads and combined outputs are screened for NaN/Inf rows
+    at the stage boundaries (corrupted rows dropped + counted, never
+    propagated to the residual stream); and the new ``MoEStats`` fault
+    counters report what happened.
     """
     T, D = x.shape
     ctx = make_stage_ctx(cfg, axis_name)
+    res = resilience
+    fallback_before = (0 if res is None
+                       else res.counters["fallback_plans"])
     gs = gate_stage(ctx, x, params.router, router_bias)
-    ps = plan_stage(ctx, gs, lam_e_est=lam_e_est)
-    dist = distribute_stage(ctx, params, gs, ps)
+    ps = plan_stage(ctx, gs, lam_e_est=lam_e_est, resilience=res)
+    ps, dist = _distribute_with_ladder(ctx, params, gs, ps, res)
 
     C = cfg.overlap_chunks
     if T % C != 0:
@@ -480,27 +723,40 @@ def run_staged_moe(
     bounds = chunk_bounds(T, n_chunks=C)
     offsets = (chunk_occ_offsets(gs.gate_out.expert_ids, C,
                                  cfg.gating.num_experts) if C > 1 else None)
+    screening = res is not None and res.cfg.screen_payloads
 
     def disp(i: int) -> DispatchState:
         s, ln = bounds[i]
         off = offsets[i] if offsets is not None else None
-        return dispatch_stage(ctx, x[s:s + ln],
-                              gs.gate_out.expert_ids[s:s + ln], gs, ps,
-                              occ_offset=off)
+        d = dispatch_stage(ctx, x[s:s + ln],
+                           gs.gate_out.expert_ids[s:s + ln], gs, ps,
+                           occ_offset=off)
+        if res is not None and res.injector is not None:
+            d = d._replace(xs=res.injector.corrupt_payload(d.xs, res.layer))
+        return d
 
     ys = []
     drops_dispatch = jnp.zeros((), _I32)
     drops_slot = jnp.zeros((), _I32)
     max_slot_load = jnp.zeros((), _I32)
+    dropped_payload = jnp.zeros((), _I32)
     d_next = disp(0)
     for i in range(C):
         # Double-buffer: issue chunk i+1's dispatch before consuming chunk
         # i's buffers, then retire chunk i with FFN + combine.
         d_cur, d_next = d_next, (disp(i + 1) if i + 1 < C else None)
+        if screening:
+            xs, valid, n_bad = screen_payload(d_cur.xs, d_cur.valid)
+            d_cur = d_cur._replace(xs=xs, valid=valid)
+            dropped_payload = dropped_payload + n_bad
         out = compute_stage(ctx, d_cur, dist)
         s, ln = bounds[i]
-        ys.append(combine_stage(ctx, d_cur, out,
-                                gs.gate_out.weights[s:s + ln]))
+        y_chunk = combine_stage(ctx, d_cur, out,
+                                gs.gate_out.weights[s:s + ln])
+        if screening:
+            y_chunk, n_bad = _screen_rows(y_chunk)
+            dropped_payload = dropped_payload + n_bad
+        ys.append(y_chunk)
         drops_dispatch = drops_dispatch + d_cur.drops_dispatch
         drops_slot = drops_slot + d_cur.drops_slot
         max_slot_load = jnp.maximum(
@@ -527,6 +783,11 @@ def run_staged_moe(
         tier_bytes = ps.plan.tier_tokens * payload_bytes_per_item(
             D, cfg.wire_dtype, base_bytes=x.dtype.itemsize)
 
+    fallbacks = quarantined = None
+    if res is not None:
+        fallbacks = jnp.asarray(
+            res.counters["fallback_plans"] - fallback_before, _I32)
+        quarantined = jnp.asarray(res.num_quarantined(), _I32)
     stats = MoEStats(
         drops_dispatch=drops_dispatch,
         drops_slot=drops_slot,
@@ -537,5 +798,8 @@ def run_staged_moe(
         tier_tokens=ps.plan.tier_tokens,
         tier_replicas=ps.plan.tier_replicas,
         tier_bytes=tier_bytes,
+        fallback_plans=fallbacks,
+        dropped_payload_tokens=(dropped_payload if res is not None else None),
+        quarantined_ranks=quarantined,
     )
     return y.astype(x.dtype), gs.gate_out.aux_loss, stats

@@ -36,6 +36,7 @@ class Request:
     first_token_at: float | None = None
     done_at: float | None = None
     output: list | None = None
+    failed: bool = False            # retired by the fault path, no output
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,6 +44,9 @@ class EngineConfig:
     chunk_size: int = 4096          # chunked-prefill size (paper: 4K)
     decode_batch: int = 8           # decode slots
     max_seq: int = 8192
+    max_retries: int = 1            # model-call retries before a request
+    # (prefill) or a decode group is retired as failed -- the engine never
+    # stalls on a faulting step (DESIGN.md S13)
 
 
 class ServingEngine:
@@ -74,6 +78,15 @@ class ServingEngine:
         self.waiting: deque[Request] = deque()
         self.decoding: list[tuple[Request, object]] = []
         self.finished: list[Request] = []
+        # Degraded-fabric accounting (DESIGN.md S13): the engine retries a
+        # faulting model call up to cfg.max_retries times, then retires the
+        # affected request(s) as failed instead of stalling the queue.
+        self.fault_counters = {
+            "prefill_retries": 0,
+            "decode_retries": 0,
+            "failed_requests": 0,
+            "nonfinite_logits": 0,
+        }
 
     def submit(self, req: Request):
         self.waiting.append(req)
@@ -81,32 +94,77 @@ class ServingEngine:
     def _advance(self, dt: float):
         self.now += dt
 
+    def _fail(self, req: Request):
+        req.failed = True
+        req.done_at = self.now
+        self.fault_counters["failed_requests"] += 1
+        self.finished.append(req)
+
+    def _argmax_token(self, row: np.ndarray) -> int:
+        """Greedy token with non-finite logits screened.
+
+        NaN logits would make ``argmax`` pick an arbitrary lane; masking
+        them keeps decoding deterministic under payload corruption.  A row
+        with no finite entry degrades to token 0 (still counted).
+        """
+        row = np.asarray(row, dtype=np.float64)
+        finite = np.isfinite(row)
+        if not finite.all():
+            self.fault_counters["nonfinite_logits"] += 1
+            if not finite.any():
+                return 0
+            row = np.where(finite, row, -np.inf)
+        return int(np.argmax(row))
+
+    def _prefill(self, req: Request) -> tuple[object, object]:
+        cache = self.new_cache_fn(1)
+        last_logits = None
+        # Same chunking helper as the MoE overlap driver
+        # (repro.moe.stages): fixed-size spans, ragged tail.
+        for pos, length in chunk_bounds(
+                len(req.prompt), chunk_size=self.cfg.chunk_size):
+            chunk = req.prompt[pos: pos + length]
+            pad = self.cfg.chunk_size - length
+            toks = np.pad(chunk, (0, pad))[None, :]
+            last_logits, cache = self.prefill_fn(
+                jnp.asarray(toks, jnp.int32), cache, pos, length)
+            self._advance(self.clock_fn() if self.clock_fn else 0.0)
+        return last_logits, cache
+
     def run(self, until_empty: bool = True):
-        """Alternate prefill and decode until queues drain."""
+        """Alternate prefill and decode until queues drain.
+
+        Model-call failures (``RuntimeError``: injected planner/transfer
+        faults and their real counterparts) never escape: the call is
+        retried up to ``cfg.max_retries`` times, after which the affected
+        request (prefill) or decode group is retired as failed and the
+        queue keeps draining.
+        """
         while self.waiting or self.decoding:
             # 1. Prefill the oldest waiting request, chunk by chunk.
             if self.waiting:
                 req = self.waiting.popleft()
                 if self.now < req.arrival:
                     self.now = req.arrival
-                cache = self.new_cache_fn(1)
-                last_logits = None
-                # Same chunking helper as the MoE overlap driver
-                # (repro.moe.stages): fixed-size spans, ragged tail.
-                for pos, length in chunk_bounds(
-                        len(req.prompt), chunk_size=self.cfg.chunk_size):
-                    chunk = req.prompt[pos: pos + length]
-                    pad = self.cfg.chunk_size - length
-                    toks = np.pad(chunk, (0, pad))[None, :]
-                    last_logits, cache = self.prefill_fn(
-                        jnp.asarray(toks, jnp.int32), cache, pos, length)
-                    self._advance(self.clock_fn() if self.clock_fn else 0.0)
-                req.first_token_at = self.now
-                # Host-side scheduling layer (module docstring): reading
-                # results back is the point, never under jit.
-                first = int(np.argmax(np.asarray(last_logits)[0, -1]))  # uep-lint: disable=host-sync
-                req.output = [first]
-                self.decoding.append((req, cache))
+                last_logits = cache = None
+                for attempt in range(self.cfg.max_retries + 1):
+                    try:
+                        last_logits, cache = self._prefill(req)
+                        break
+                    except RuntimeError:
+                        # Retry the whole prefill; the chunk loop mutates
+                        # only local state so a clean restart is safe.
+                        if attempt == self.cfg.max_retries:
+                            self._fail(req)
+                        else:
+                            self.fault_counters["prefill_retries"] += 1
+                if last_logits is not None:
+                    req.first_token_at = self.now
+                    # Host-side scheduling layer (module docstring): reading
+                    # results back is the point, never under jit.
+                    first = self._argmax_token(np.asarray(last_logits)[0, -1])  # uep-lint: disable=host-sync
+                    req.output = [first]
+                    self.decoding.append((req, cache))
 
             # 2. One decode step over all active slots (batched).
             if self.decoding and (len(self.decoding) >= self.cfg.decode_batch
@@ -114,12 +172,29 @@ class ServingEngine:
                 group = self.decoding[: self.cfg.decode_batch]
                 toks = np.array([[r.output[-1]] for r, _ in group], np.int32)  # uep-lint: disable=host-sync
                 caches = self.stack_caches([c for _, c in group])
-                logits, caches = self.decode_fn(jnp.asarray(toks), caches)
+                logits = None
+                for attempt in range(self.cfg.max_retries + 1):
+                    try:
+                        logits, caches = self.decode_fn(jnp.asarray(toks),
+                                                        caches)
+                        break
+                    except RuntimeError:
+                        if attempt == self.cfg.max_retries:
+                            # Retire the whole group: a decode step that
+                            # keeps faulting must not wedge the queue.
+                            for r, _ in group:
+                                self._fail(r)
+                            self.decoding = self.decoding[
+                                self.cfg.decode_batch:]
+                        else:
+                            self.fault_counters["decode_retries"] += 1
+                if logits is None:
+                    continue
                 self._advance(self.clock_fn() if self.clock_fn else 0.0)
-                nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))  # uep-lint: disable=host-sync
+                logits_np = np.asarray(logits[:, -1])  # uep-lint: disable=host-sync
                 still = []
                 for i, (r, _) in enumerate(group):
-                    r.output.append(int(nxt[i]))
+                    r.output.append(self._argmax_token(logits_np[i]))
                     if len(r.output) >= r.max_new_tokens:
                         r.done_at = self.now
                         self.finished.append(r)
@@ -144,12 +219,17 @@ class ServingEngine:
     # ------------- metrics -------------
 
     def ttft(self) -> np.ndarray:
+        # Failed (retired) requests never produced a first token; latency
+        # statistics cover completed requests only.
         return np.array([r.first_token_at - r.arrival
-                         for r in self.finished])
+                         for r in self.finished
+                         if not r.failed and r.first_token_at is not None])
 
     def tpot(self) -> np.ndarray:
         out = []
         for r in self.finished:
+            if r.failed or r.first_token_at is None:
+                continue
             n = max(len(r.output) - 1, 1)
             out.append((r.done_at - r.first_token_at) / n)
         return np.array(out)

@@ -6,8 +6,10 @@ the latest checkpoint and replays the deterministic data stream from the
 recovered step counter (bitwise identical batches).  If a mesh rebuild
 callback is provided, it can resume on a *smaller* mesh (elastic restart)
 -- the checkpointer reshards on load.  Straggler detection tracks a
-step-time EWMA and flags z-score outliers; on real multi-host deployments
-the flag feeds host eviction, here it is surfaced in the metrics.
+step-time EWMA and flags z-score outliers; the flags feed a per-rank
+:class:`repro.core.health.RankHealth` model whose weights the planner
+consumes (DESIGN.md S13), so a detected straggler actually loses quota
+instead of just being logged.
 """
 
 from __future__ import annotations
@@ -20,6 +22,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import Checkpointer
+from repro.core.health import HealthConfig, RankHealth
 
 __all__ = ["SupervisorConfig", "Supervisor"]
 
@@ -31,6 +34,7 @@ class SupervisorConfig:
     max_restarts: int = 3
     straggler_zscore: float = 3.0
     ewma_decay: float = 0.9
+    num_ranks: int = 1              # EP ranks tracked by the health model
 
 
 class Supervisor:
@@ -51,9 +55,25 @@ class Supervisor:
         self._ewma = None
         self._ewvar = 0.0
         self.straggler_flags: list[int] = []
+        self.health = RankHealth(cfg.num_ranks, HealthConfig(
+            ewma_decay=cfg.ewma_decay,
+            quarantine_zscore=cfg.straggler_zscore))
 
-    def _track_time(self, step: int, dt: float):
+    def rank_health(self) -> RankHealth:
+        """The live per-rank health model (planner-consumable weights)."""
+        return self.health
+
+    def _track_time(self, step: int, dt: float,
+                    rank_times: np.ndarray | None = None):
         self.step_times.append(dt)
+        # Per-rank times (from metrics["rank_step_times"] when the step fn
+        # reports them, else the global dt broadcast) feed the health model;
+        # its weights reach the planner via rank_health() -- the flag list
+        # below is kept for backward compatibility but no longer the only
+        # consumer of straggler detection.
+        if rank_times is None:
+            rank_times = np.full(self.cfg.num_ranks, dt)
+        self.health.observe(np.asarray(rank_times, dtype=np.float64))
         if self._ewma is None:
             self._ewma = dt
             return
@@ -73,10 +93,17 @@ class Supervisor:
         while step < end:
             try:
                 batch = self.batch_fn(step)
-                t0 = time.perf_counter()
+                # Monotonic clock: step durations must survive wall-clock
+                # adjustments (NTP slew would poison the straggler z-score).
+                t0 = time.monotonic()
                 state, metrics = self.step_fn(state, batch)
                 jax.block_until_ready(metrics["loss"])
-                self._track_time(step, time.perf_counter() - t0)
+                rank_times = metrics.get("rank_step_times") \
+                    if hasattr(metrics, "get") else None
+                if rank_times is not None:
+                    rank_times = np.asarray(rank_times)
+                self._track_time(step, time.monotonic() - t0,
+                                 rank_times=rank_times)
                 step += 1
                 if on_metrics is not None:
                     on_metrics(step, metrics)

@@ -16,7 +16,11 @@ driver's per-chunk buffer invariants
 int8,bf16`` additionally prices each rack-aware plan's tier volumes with the
 production wire-byte helper (``repro.core.quantize.payload_bytes_per_item``)
 and cross-checks them against the verifier's independent width mirror
-(:func:`repro.analysis.plan_check.verify_tier_bytes`).
+(:func:`repro.analysis.plan_check.verify_tier_bytes`); ``--health
+1.0,0.5,0.0`` additionally solves each ultraep cell with rank 0 degraded to
+the given relative speed and checks the health-capacity/quarantine
+invariants (quota scales with weight, a 0-weight rank drains to zero, tier
+volumes stay conserved) -- the degraded-fabric fault sweep (DESIGN.md S13).
 """
 
 from __future__ import annotations
@@ -71,10 +75,16 @@ def main(argv: list[str] | None = None) -> int:
                          "'int8,bf16')")
     ap.add_argument("--d-model", type=int, default=4096,
                     help="payload feature width for the wire-byte check")
+    ap.add_argument("--health", type=str, default="",
+                    help="comma-separated relative speeds for rank 0; each "
+                         "ultraep cell is re-solved health-weighted and "
+                         "checked for quota-proportionality / quarantine "
+                         "drain / tier conservation (e.g. '1.0,0.5,0.0')")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
     chunk_list = [int(c) for c in args.chunks.split(",") if c.strip()]
     wire_list = [w.strip() for w in args.wire_dtype.split(",") if w.strip()]
+    health_list = [float(h) for h in args.health.split(",") if h.strip()]
 
     import jax
     jax.config.update("jax_platforms", "cpu")
@@ -143,6 +153,22 @@ def main(argv: list[str] | None = None) -> int:
                             vio += plan_check.verify_tier_bytes(
                                 plan, tb, d_model=args.d_model,
                                 wire_dtype=wd)
+
+                    # Health sweep: degrade rank 0 to each requested speed,
+                    # re-solve health-weighted and check the capacity /
+                    # quarantine / conservation invariants (ultraep only --
+                    # the baselines are documented health-blind).
+                    if mode == "ultraep":
+                        for h in health_list:
+                            w = np.ones(R)
+                            w[0] = h
+                            plan_h = balancer.solve(
+                                lam, home, cfg, rack_size=rack_size,
+                                health_weight=jnp.asarray(w, jnp.float32))
+                            vio += plan_check.verify_plan(
+                                plan_h, topo, lam=np.asarray(lam),
+                                home=np.asarray(home),
+                                rack_aware_mode=rack_aware, health_weight=w)
 
                     n_cells += 1
                     cell = (f"E={E} R={R} rack={rack_size} skew={skew} "
