@@ -20,6 +20,16 @@ token volumes -- the paper's Fig. 16-style trajectory on a two-level fabric.
 payloads (``expert_wire_bytes``) and quantized per-tier token volumes
 (``tier_wire_bytes``), reporting total modeled inter-rack bytes and their
 drop vs the fp32 wire.
+
+``sweep_rack_limit`` measures rack-limited routing (DESIGN.md S14): for
+each rack limit M it gates tokens through the masked router with the
+per-rack aux-free bias adapting online, and reports (a) the at-gate
+*deduplicated* payload-copy volume per fabric tier (each token crosses to
+at most M racks once, however many experts it hits there), (b) the
+post-plan item tiers of the rack-aware solve fed with the at-gate rack
+incidence (``demand_tiebreak``), and (c) the adapted per-expert load
+imbalance as the routing-quality proxy, all relative to the free-routing
+(M=0) baseline.
 """
 
 from __future__ import annotations
@@ -199,6 +209,100 @@ def sweep_tiered(ratios=(1.0, 2.0, 4.0, 8.0), quiet=False, **kw):
     return rows
 
 
+def one_rack_limit_case(M, R=64, lanes=8, E=128, k=8, t_rank=64, n_slot=2,
+                        seed=0, bias_steps=300, bias_speed=2e-3, d=64):
+    """Gate -> plan at one rack limit M (M=0 is the free-routing baseline).
+
+    Runs the masked router with the aux-free bias adapting online (per-rack
+    variant when the limit binds, global otherwise), then feeds the gated
+    load to the rack-aware planner with the co-design inputs.  The at-gate
+    tiers count *deduplicated* (token, destination) payload copies -- the
+    volume a destination-aggregating fabric actually moves -- while the
+    post-plan tiers count the reroute matrix's per-item volumes.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.moe.gating import (GatingConfig, gate, rack_copy_volumes,
+                                  update_router_bias)
+
+    G = R // lanes
+    rng = np.random.default_rng(seed)
+    scale = 1.0 + 0.4 * np.abs(rng.normal(size=E))  # popularity skew
+    wg = jnp.asarray(rng.normal(size=(d, E)) * scale[None, :] / np.sqrt(d),
+                     jnp.float32)
+    cfg = GatingConfig(num_experts=E, top_k=k, use_bias=True,
+                       num_racks=G if M else 1, rack_limit=M)
+    T = t_rank * R
+    key = jax.random.PRNGKey(seed)
+    g = jax.jit(lambda x, b: gate(x, wg, cfg, bias=b))
+    upd = jax.jit(lambda b, c: update_router_bias(
+        b, c, bias_speed, num_racks=G if (M and M < G) else 1))
+    bias = jnp.zeros((E,), jnp.float32)
+    imbs = []
+    out = None
+    for s in range(bias_steps):
+        x = jax.random.normal(jax.random.fold_in(key, s), (T, d))
+        out = g(x, bias)
+        if s >= bias_steps - 50:
+            c = np.asarray(out.counts)
+            imbs.append(c.max() / c.mean())
+        bias = upd(bias, out.counts)
+
+    home = np.repeat(np.arange(R), E // R)
+    home_j = jnp.asarray(home, jnp.int32)
+    ids = np.asarray(out.expert_ids).reshape(R, t_rank, k)
+    lam = np.zeros((R, E), np.int64)
+    gate_tiers = np.zeros(3, np.int64)
+    for r in range(R):
+        np.add.at(lam[r], ids[r].reshape(-1), 1)
+        gate_tiers += np.asarray(rack_copy_volumes(
+            jnp.asarray(ids[r], jnp.int32), home_j, num_ranks=R,
+            rack_size=lanes, src_rank=jnp.int32(r)))
+    plan = pl.solve_plan(jnp.asarray(lam, jnp.int32), home_j, n_slot=n_slot,
+                         u_min=8, rack_size=lanes,
+                         demand_tiebreak=bool(M and M < G),
+                         gate_tier_tokens=jnp.asarray(gate_tiers, jnp.int32))
+    post = np.asarray(plan.tier_tokens, dtype=np.int64)
+    return dict(
+        rack_limit=int(M), racks=G, tokens=T, items=T * k,
+        imbalance=float(np.mean(imbs)),
+        gate_local=int(gate_tiers[0]), gate_intra=int(gate_tiers[1]),
+        gate_inter=int(gate_tiers[2]),
+        post_local=int(post[0]), post_intra=int(post[1]),
+        post_inter=int(post[2]),
+        gate_inter_per_token=float(gate_tiers[2]) / T,
+        post_max=int(plan.post_max),
+    )
+
+
+def sweep_rack_limit(limits=(1, 2, 4), quiet=False, **kw):
+    """At-gate copy volume, post-plan tiers and adapted imbalance vs M."""
+    rows = [one_rack_limit_case(0, **kw)]
+    G = rows[0]["racks"]
+    for M in sorted({min(m, G) for m in limits} | {G}):
+        rows.append(one_rack_limit_case(M, **kw))
+    base = rows[0]
+    for r in rows:
+        r["gate_inter_drop_vs_free"] = (base["gate_inter"]
+                                        / max(r["gate_inter"], 1))
+        r["imbalance_ratio_vs_free"] = r["imbalance"] / base["imbalance"]
+        r["post_inter_ratio_vs_free"] = (r["post_inter"]
+                                         / max(base["post_inter"], 1))
+    if not quiet:
+        print("\n== Fig. 16d: rack-limited routing (at-gate volume) ==")
+        print(f"{'M':>4s} {'gate inter':>10s} {'drop':>6s} {'/token':>7s} "
+              f"{'post inter':>10s} {'ratio':>6s} {'imbal':>6s} {'ratio':>6s}")
+        for r in rows:
+            lbl = "free" if r["rack_limit"] == 0 else str(r["rack_limit"])
+            print(f"{lbl:>4s} {r['gate_inter']:10d} "
+                  f"{r['gate_inter_drop_vs_free']:5.2f}x "
+                  f"{r['gate_inter_per_token']:7.3f} {r['post_inter']:10d} "
+                  f"{r['post_inter_ratio_vs_free']:5.2f}x "
+                  f"{r['imbalance']:6.3f} {r['imbalance_ratio_vs_free']:5.2f}x")
+    return rows
+
+
 def run(quiet=False):
     rows = [one_case(a) for a in (2.0, 1.5, 1.2, 1.05)]
     if not quiet:
@@ -217,3 +321,4 @@ if __name__ == "__main__":
     run()
     sweep_tiered()
     sweep_wire()
+    sweep_rack_limit()

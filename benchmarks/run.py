@@ -3,7 +3,8 @@
 Prints a ``name,value,unit`` CSV summary at the end for machine parsing and
 writes ``BENCH_breakdown.json`` (per-stage dispatch/bucket/combine ms plus
 the fused-vs-reference pipeline speedup), ``BENCH_comm.json`` (Fig. 16
-relay latencies plus the tiered intra/inter-rack bandwidth sweep) and
+relay latencies, the tiered intra/inter-rack bandwidth sweep, the
+wire-dtype byte sweep and the rack-limited routing sweep) and
 ``BENCH_fault.json`` (degraded-fabric sweep: health-weighted vs blind
 planning under a straggler rank, plus the degradation-ladder counters) so
 the perf trajectory is recorded across PRs.
@@ -63,11 +64,24 @@ def main() -> None:
                 f"{by_dtype['int8']['inter_drop_vs_fp32']:.2f}", "x"))
     csv.append(("comm.wire_inter_drop.bf16",
                 f"{by_dtype['bf16']['inter_drop_vs_fp32']:.2f}", "x"))
+
+    # -- Fig. 16d: rack-limited routing sweep ----------------------------
+    rl = bench_comm.sweep_rack_limit()
+    by_m = {r["rack_limit"]: r for r in rl}
+    for m in (1, 2):
+        if m in by_m:
+            csv.append((f"comm.rack_limit_gate_inter_drop.M{m}",
+                        f"{by_m[m]['gate_inter_drop_vs_free']:.2f}", "x"))
+            csv.append((f"comm.rack_limit_imbalance_ratio.M{m}",
+                        f"{by_m[m]['imbalance_ratio_vs_free']:.2f}", "ratio"))
+            csv.append((f"comm.rack_limit_post_inter_ratio.M{m}",
+                        f"{by_m[m]['post_inter_ratio_vs_free']:.2f}", "ratio"))
     comm_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                              os.pardir, "BENCH_comm.json")
     with open(os.path.abspath(comm_path), "w") as f:
         json.dump({"fig16_flat": comm, "fig16b_tiered_sweep": tiered,
-                   "fig16c_wire_dtype_sweep": wire},
+                   "fig16c_wire_dtype_sweep": wire,
+                   "sweep_rack_limit": rl},
                   f, indent=2, default=float)
         f.write("\n")
 

@@ -46,6 +46,14 @@ with ``# uep-lint: skip-file`` in its first ten lines):
                          scales) and no test that compares at tolerance
                          will catch the extra half-step of error
                          (DESIGN.md S12).
+* ``rack-limit``      -- no ``top_k`` calls (``jax.lax.top_k`` /
+                         ``jnp.top_k``) in MoE engine modules outside
+                         ``repro.moe.gating``: expert selection must go
+                         through the gate so the rack-group mask of
+                         rack-limited routing (DESIGN.md S14) is applied.
+                         An ad-hoc top-k over expert scores elsewhere
+                         silently bypasses the ``rack_limit`` bound and
+                         re-inflates inter-rack traffic.
 * ``fallback-path``   -- no bare ``except:`` and no ``except Exception:`` /
                          ``except BaseException:`` whose body only ``pass``es
                          in ``repro`` code: the degradation ladder
@@ -88,7 +96,7 @@ class LintViolation:
 
 
 RULES = ("axis-name", "host-sync", "float64-literal", "rack-loop",
-         "stage-boundary", "wire-dtype", "fallback-path")
+         "stage-boundary", "wire-dtype", "rack-limit", "fallback-path")
 
 # Canonical mesh-axis vocabulary: ParallelCtx defaults (batch_axes=("data",),
 # model_axis="model") plus the documented factored/mesh extras ("pod" FSDP
@@ -124,6 +132,13 @@ _F64_PATH_PARTS = ("kernels", "moe")
 # helpers themselves are exempt.
 _WIRE_PATH_PARTS = ("moe",)
 _WIRE_DTYPES_FLAGGED = ("int8", "bfloat16")
+
+# rack-limit: expert selection is confined to the gate (repro.moe.gating),
+# the single module that applies the rack-group mask.  A top_k anywhere else
+# under moe/ is selection that bypasses the mask.
+_RACK_LIMIT_PATH_PARTS = ("moe",)
+_RACK_LIMIT_EXEMPT_STEMS = frozenset({"gating"})
+_TOP_K_PREFIXES = ("jax.lax", "lax", "jnp", "jax.numpy")
 
 # fallback-path applies to library code under repro/ (tests and tools may
 # legitimately probe with broad handlers).
@@ -263,11 +278,15 @@ def _swallows_all(handler: ast.ExceptHandler) -> str | None:
 
 class _FileLinter:
     def __init__(self, path: str, tree: ast.Module, check_f64: bool,
-                 check_wire: bool = False, check_fallback: bool = False):
+                 check_wire: bool = False, check_fallback: bool = False,
+                 check_rack_limit: bool = False):
         self.path = path
         self.check_f64 = check_f64
         self.check_wire = check_wire
         self.check_fallback = check_fallback
+        self.check_rack_limit = (check_rack_limit and
+                                 Path(path).stem not in
+                                 _RACK_LIMIT_EXEMPT_STEMS)
         self.check_stage = not _stage_exempt(path)
         self.tree = tree
         self.found: dict[tuple[int, int, str], LintViolation] = {}
@@ -299,6 +318,17 @@ class _FileLinter:
                             f"mesh axis {sorted(ALLOWED_AXIS_NAMES)}; pass "
                             "the ParallelCtx/MeshAxes name instead of a "
                             "fresh literal")
+                if self.check_rack_limit:
+                    d = _dotted(node.func)
+                    if d.endswith(".top_k") and \
+                            d.rsplit(".", 1)[0] in _TOP_K_PREFIXES:
+                        self.emit(
+                            node, "rack-limit",
+                            f"{d}() outside repro.moe.gating: top-k expert "
+                            "selection must go through gate() so the "
+                            "rack-group mask of rack-limited routing "
+                            "(GatingConfig.rack_limit, DESIGN.md S14) is "
+                            "applied; an ad-hoc top-k bypasses the bound")
                 if self.check_wire:
                     dt = _wire_dtype_cast(node)
                     if dt is not None:
@@ -390,7 +420,10 @@ def lint_source(source: str, path: str = "<string>") -> list[LintViolation]:
     check_f64 = any(part in _F64_PATH_PARTS for part in Path(path).parts)
     check_wire = any(part in _WIRE_PATH_PARTS for part in Path(path).parts)
     check_fb = any(part in _FALLBACK_PATH_PARTS for part in Path(path).parts)
-    found = _FileLinter(path, tree, check_f64, check_wire, check_fb).run()
+    check_rl = any(part in _RACK_LIMIT_PATH_PARTS
+                   for part in Path(path).parts)
+    found = _FileLinter(path, tree, check_f64, check_wire, check_fb,
+                        check_rl).run()
     return [v for v in found if not _suppressed(lines, v)]
 
 

@@ -45,10 +45,21 @@ Checked invariants (rule ids):
                                 ``repro.core.quantize.payload_bytes_per_item``)
                                 so a bug in the production helper cannot
                                 vouch for itself.
+* ``gate-tier-accounting``   -- the plan's at-gate ``gate_tier_tokens``
+                                (deduplicated payload copies, DESIGN.md S14)
+                                are consistent with the load matrix: each
+                                tier's copy count is bounded by the
+                                home-routing item count of the same tier
+                                (dedup can only shrink volume).
 * ``rack-local-optimality``  -- (warn) the reroute crosses racks more than
                                 the minimum achievable for its quota table;
                                 expected for the topology-blind EPLB
                                 baselines, a regression for rack-aware modes.
+
+:func:`verify_rack_limit` is the routing-side invariant of rack-limited
+gating (DESIGN.md S14): every token's selected experts span at most
+``rack_limit`` racks, and at ``rack_limit == num_racks`` the selection is
+bitwise identical to free routing.
 
 The module also provides the opt-in debug hook used by
 :func:`repro.core.balancer.solve` (enable with :func:`plan_verification`) and
@@ -67,6 +78,7 @@ from repro.analysis.violation import Violation, errors, format_violations
 __all__ = [
     "PlanViolationError",
     "verify_plan",
+    "verify_rack_limit",
     "verify_tier_bytes",
     "verify_chunking",
     "check_capacities",
@@ -458,6 +470,28 @@ def verify_plan(
                     "tier-accounting",
                     f"tier_replicas={tr.tolist()} != placement tiers "
                     f"{want_tr.tolist()}"))
+        gate_tt = getattr(plan, "gate_tier_tokens", None)
+        if gate_tt is not None:
+            gtt = _np(gate_tt).astype(np.int64)
+            if gtt.shape != (3,) or (gtt < 0).any():
+                out.append(Violation(
+                    "gate-tier-accounting",
+                    f"gate_tier_tokens={gtt.tolist()} is not a non-negative "
+                    "[local, intra, inter] triple"))
+            else:
+                # Dedup copies can only shrink volume: each copy in a tier
+                # implies >= 1 home-routed item in the same tier, so the
+                # at-gate copy counts are bounded by the home-routing item
+                # tiers computed from the load matrix.
+                onehot = (home[:, None] == np.arange(R)[None, :])
+                q_home = (lam @ onehot.astype(np.int64))[:, None, :]  # (R,1,R)
+                want_items = _token_tiers(q_home, rack_size)
+                if (gtt > want_items).any():
+                    out.append(Violation(
+                        "gate-tier-accounting",
+                        f"gate_tier_tokens={gtt.tolist()} exceeds the "
+                        f"home-routing item tiers {want_items.tolist()} "
+                        "(dedup copies cannot outnumber items)"))
         if rack_aware_mode is not False and not errors(out):
             actual_inter = int(_token_tiers(q, rack_size)[2])
             min_inter = _min_inter_rack_tokens(lam, u, rack_size)
@@ -468,6 +502,72 @@ def verify_plan(
                     f"{min_inter} is achievable for this quota table "
                     "(topology-blind reroute)",
                     severity="error" if rack_aware_mode else "warn"))
+    return out
+
+
+def verify_rack_limit(expert_ids: Any, *, rack_limit: int, num_racks: int,
+                      num_experts: int,
+                      free_expert_ids: Any = None) -> list[Violation]:
+    """Verify the routing-side invariant of rack-limited gating.
+
+    ``expert_ids`` is the gate's (T, k) selection for one shard.  Checks,
+    under rule id ``rack-limit``:
+
+    * every token's selected experts span at most ``rack_limit`` distinct
+      racks (experts are rack-blocked: expert ``e`` lives in rack
+      ``e // (num_experts // num_racks)``, matching the contiguous home
+      layout the gate's group mask assumes);
+    * when ``free_expert_ids`` (the unmasked top-k selection) is supplied
+      and ``rack_limit >= num_racks``, the two selections are bitwise
+      identical -- rack-limited routing must reduce *exactly* to free
+      routing when the limit does not bind.
+
+    Vacuously passes when the limit is off (``rack_limit == 0`` or a
+    single-rack topology).  Returns a list of violations; empty == green.
+    """
+    out: list[Violation] = []
+    if num_racks <= 1 or rack_limit <= 0:
+        return out
+    if num_experts % num_racks:
+        out.append(Violation(
+            "rack-limit",
+            f"num_experts={num_experts} not divisible by "
+            f"num_racks={num_racks}: experts are not rack-blocked"))
+        return out
+    ids = _np(expert_ids).astype(np.int64)
+    if ids.ndim != 2:
+        out.append(Violation(
+            "rack-limit", f"expert_ids must be (T, k), got shape {ids.shape}"))
+        return out
+    if ids.size and (ids.min() < 0 or ids.max() >= num_experts):
+        out.append(Violation(
+            "rack-limit",
+            f"expert id out of range [0, {num_experts}): "
+            f"[{int(ids.min())}, {int(ids.max())}]"))
+        return out
+    epg = num_experts // num_racks
+    racks = ids // epg                                       # (T, k)
+    hit = np.zeros((ids.shape[0], num_racks), dtype=bool)    # (T, G)
+    np.put_along_axis(hit, racks, True, axis=1)
+    spans = hit.sum(axis=1)
+    limit = min(rack_limit, num_racks)
+    if ids.size and int(spans.max(initial=0)) > limit:
+        worst = int(np.argmax(spans))
+        out.append(Violation(
+            "rack-limit",
+            f"token {worst} routes to {int(spans[worst])} rack(s) "
+            f"{sorted(set(racks[worst].tolist()))} but rack_limit={limit} "
+            f"({int((spans > limit).sum())} token(s) over the limit)"))
+    if free_expert_ids is not None and rack_limit >= num_racks:
+        free = _np(free_expert_ids).astype(np.int64)
+        if not np.array_equal(ids, free):
+            bad = int((ids != free).any(axis=-1).sum()) if (
+                ids.shape == free.shape) else ids.shape[0]
+            out.append(Violation(
+                "rack-limit",
+                f"rack_limit={rack_limit} >= num_racks={num_racks} must be "
+                f"bitwise identical to free routing but {bad} token(s) "
+                "differ"))
     return out
 
 

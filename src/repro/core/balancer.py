@@ -42,7 +42,8 @@ class BalancerConfig:
 
 
 def _finish_plan(lam: jax.Array, u: jax.Array, q: jax.Array, home: jax.Array,
-                 n_slot: int, rack_size: int | None = None) -> Plan:
+                 n_slot: int, rack_size: int | None = None,
+                 gate_tier_tokens: jax.Array | None = None) -> Plan:
     R = lam.shape[0]
     x = planner.slot_assignment(u, home, n_slot)
     hosted = (u.T > 0) | jax.nn.one_hot(home, R, dtype=jnp.bool_).T
@@ -57,18 +58,20 @@ def _finish_plan(lam: jax.Array, u: jax.Array, q: jax.Array, home: jax.Array,
                      else planner.token_tier_volumes(q, rack_size)),
         tier_replicas=(None if rack_size is None
                        else planner.replica_tier_volumes(u, home, rack_size)),
+        gate_tier_tokens=gate_tier_tokens,
     )
 
 
 def no_balance_plan(lam: jax.Array, home: jax.Array, n_slot: int,
-                    rack_size: int | None = None) -> Plan:
+                    rack_size: int | None = None,
+                    gate_tier_tokens: jax.Array | None = None) -> Plan:
     """Identity plan: every token goes to its expert's home rank."""
     lam = lam.astype(_I32)
     R, E = lam.shape
     u = (jax.nn.one_hot(home, R, dtype=_I32) * lam.sum(axis=0)[:, None]).astype(_I32)
     # q[r, e, t] = lam[r, e] iff t == home[e]
     q = lam[:, :, None] * jax.nn.one_hot(home, R, dtype=_I32)[None, :, :]
-    return _finish_plan(lam, u, q, home, n_slot, rack_size)
+    return _finish_plan(lam, u, q, home, n_slot, rack_size, gate_tier_tokens)
 
 
 def solve(
@@ -79,6 +82,8 @@ def solve(
     lam_e_est: jax.Array | None = None,
     rack_size: int | None = None,
     health_weight: jax.Array | None = None,
+    demand_tiebreak: bool = False,
+    gate_tier_tokens: jax.Array | None = None,
 ) -> Plan:
     """Dispatch on ``cfg.mode``.  Jittable for all non-lplb modes.
 
@@ -97,6 +102,13 @@ def solve(
     ``mode="ultraep"``, whose quota search natively supports per-rank
     capacities; the baselines are *health-blind* (like the topology-blind
     EPLB reroute, a documented baseline limitation) and ignore it.
+
+    ``demand_tiebreak`` / ``gate_tier_tokens`` are the rack-limited-routing
+    co-design inputs (set by the plan stage when the gate's ``rack_limit``
+    binds, DESIGN.md S14): the former is honored by ``mode="ultraep"``
+    (at-gate rack incidence steers replica placement; baselines stay
+    incidence-blind), the latter is stamped on every mode's plan so at-gate
+    vs post-plan tier volumes are always reported together.
     """
     lam = lam.astype(_I32)
     home = home.astype(_I32)
@@ -112,7 +124,8 @@ def solve(
         return plan
 
     if cfg.mode in ("none", "ideal"):
-        return _checked(no_balance_plan(lam, home, cfg.n_slot, rack_size))
+        return _checked(no_balance_plan(lam, home, cfg.n_slot, rack_size,
+                                        gate_tier_tokens))
 
     if cfg.mode == "ultraep":
         return _checked(planner.solve_plan(
@@ -125,6 +138,8 @@ def solve(
             probe_parallelism=cfg.probe_parallelism,
             rack_size=rack_size,
             health_weight=health_weight,
+            demand_tiebreak=demand_tiebreak,
+            gate_tier_tokens=gate_tier_tokens,
         ), health=health_weight)
 
     if cfg.mode in ("eplb", "eplb_plus"):
@@ -137,7 +152,8 @@ def solve(
         )  # (E, R)
         q = round_robin_reroute_jax(lam, hosted)
         u = q.sum(axis=0).astype(_I32)
-        return _checked(_finish_plan(lam, u, q, home, cfg.n_slot, rack_size))
+        return _checked(_finish_plan(lam, u, q, home, cfg.n_slot, rack_size,
+                                     gate_tier_tokens))
 
     if cfg.mode == "lplb":
         import numpy as np
@@ -154,6 +170,7 @@ def solve(
         qj = planner.solve_reroute(lam, jnp.asarray(u, dtype=_I32),
                                    locality=cfg.locality, rack_size=rack_size)
         return _checked(_finish_plan(lam, jnp.asarray(u, dtype=_I32), qj,
-                                     home, cfg.n_slot, rack_size))
+                                     home, cfg.n_slot, rack_size,
+                                     gate_tier_tokens))
 
     raise ValueError(f"unknown balancer mode: {cfg.mode}")

@@ -57,6 +57,13 @@ class Plan(NamedTuple):
     # rack_size != None): token items and replica instances by fabric tier.
     tier_tokens: jax.Array | None = None    # (3,) [local, intra_rack, inter_rack]
     tier_replicas: jax.Array | None = None  # (2,) [intra_rack, inter_rack]
+    # At-gate tier accounting (populated under rack-limited routing): the
+    # (3,) deduplicated payload-copy volumes measured at the gate against
+    # the home placement (repro.moe.gating.rack_copy_volumes), BEFORE any
+    # reroute.  tier_tokens above is the post-plan twin in items; the pair
+    # is what "bounded at the source vs cleaned up by the plan" means in
+    # DESIGN.md S14.
+    gate_tier_tokens: jax.Array | None = None  # (3,) [local, intra, inter]
 
 
 def _expert_order(lam_e: jax.Array, home: jax.Array, R: int) -> jax.Array:
@@ -81,6 +88,7 @@ def _greedy_oracle(
     max_replicas_per_expert: int,
     rack_size: int | None = None,
     w: jax.Array | None = None,
+    demand_rack: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """One feasibility probe (Alg. 1 lines 6-19).  Returns (feasible, u).
 
@@ -91,6 +99,17 @@ def _greedy_oracle(
     step transfers the same delta either way), so the probe's progress is
     preserved; on a one-rack topology the bonus is uniform and the oracle is
     bit-identical to the flat one.
+
+    ``demand_rack`` ((G, E) bool, rack-aware mode only) is the *at-gate rack
+    incidence* of rack-limited routing (DESIGN.md S14): entry (g, e) marks
+    that rack g's tokens demand expert e at all.  Slack ties then prefer --
+    above the home-rack bonus -- hosts in racks that actually demand the
+    expert: under a binding rack limit an expert's demand concentrates in a
+    few racks, and a replica placed inside a demanding rack converts that
+    rack's excess into intra-rack flow at reroute time, which is how the
+    rack-local NW-corner tier starts from a bounded inter-rack volume.
+    Again only exact slack ties are re-ordered, so probe progress and the
+    solved tau are unchanged.
 
     ``w`` (normalized per-rank health weights, max == 1.0) turns the scalar
     threshold into a per-rank capacity ``cap_r = floor(tau * w_r)``: tau then
@@ -130,11 +149,15 @@ def _greedy_oracle(
             & (~hosted[e, :])
             & (nrep[e] < max_replicas_per_expert)
         )
-        # Primary score: slack.  Rack-aware mode adds a half-point bonus for
-        # the home rack so exact slack ties prefer intra-rack placement (the
-        # doubled slack keeps distinct slacks strictly ordered).
-        score = 2 * jnp.where(adm, slk, -1)
+        # Primary score: slack.  Rack-aware mode adds sub-point bonuses so
+        # exact slack ties prefer (1) racks with at-gate demand for the
+        # expert, then (2) the home rack; the scaled slack keeps distinct
+        # slacks strictly ordered above every bonus combination.
+        bonus_scale = 2 if demand_rack is None else 4
+        score = bonus_scale * jnp.where(adm, slk, -1)
         if rack_size is not None:
+            if demand_rack is not None:
+                score = score + 2 * demand_rack[:, e][rank_rack].astype(_I32)
             score = score + (rank_rack == rank_rack[home[e]]).astype(_I32)
         t = jnp.argmax(score).astype(_I32)
         has_target = adm.any() & (cap > 0)
@@ -184,6 +207,7 @@ def _greedy_oracle(
         "max_replicas_per_expert",
         "probe_parallelism",
         "rack_size",
+        "demand_tiebreak",
     ),
 )
 def solve_replication(
@@ -196,6 +220,7 @@ def solve_replication(
     probe_parallelism: int = 1,
     rack_size: int | None = None,
     health_weight: jax.Array | None = None,
+    demand_tiebreak: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Solve the quota table U by threshold binary search (Alg. 1 lines 1-25).
 
@@ -219,6 +244,11 @@ def solve_replication(
         solve.  Degenerate all-zero weights fall back to uniform.  Note tau
         is then in *full-speed-rank* units, so it can legitimately exceed
         ``post_max`` -- the plan checker accounts for this.
+      demand_tiebreak: rack-aware mode only; break exact slack ties toward
+        racks with at-gate demand for the expert (the rack incidence of
+        ``lam`` aggregated per rack).  Enabled by the balancer when the gate
+        runs rack-limited routing (DESIGN.md S14); False is bit-identical
+        to the previous rack-aware solve.
 
     Returns:
       (u, tau): quota table (E, R) int32 and the solved threshold.
@@ -257,6 +287,12 @@ def solve_replication(
         tau_lo0 = -(-total // R)  # ceil of mean rank load
         tau_hi0 = jnp.max(ell)
 
+    demand_rack = None
+    if demand_tiebreak and rack_size is not None:
+        # At-gate rack incidence: does rack g demand expert e at all?
+        demand_rack = (
+            lam.reshape(R // rack_size, rack_size, E).sum(axis=1) > 0)
+
     oracle = functools.partial(
         _greedy_oracle,
         lam_e,
@@ -268,6 +304,7 @@ def solve_replication(
         max_replicas_per_expert=max_rep,
         rack_size=rack_size,
         w=w,
+        demand_rack=demand_rack,
     )
 
     if P == 1:
@@ -508,6 +545,8 @@ def solve_plan(
     probe_parallelism: int = 1,
     rack_size: int | None = None,
     health_weight: jax.Array | None = None,
+    demand_tiebreak: bool = False,
+    gate_tier_tokens: jax.Array | None = None,
 ) -> Plan:
     """Full Alg. 1: replication + reroute + slot map + imbalance metrics.
 
@@ -518,6 +557,13 @@ def solve_plan(
     ``health_weight`` (see :func:`solve_replication`) scales each rank's
     probe capacity by its relative throughput, so quotas -- and hence
     ``token_targets`` -- follow per-rank health.
+
+    ``demand_tiebreak`` / ``gate_tier_tokens`` are the rack-limited-routing
+    co-design hooks (DESIGN.md S14): the former feeds the at-gate rack
+    incidence of ``lam`` into the replica placement (see
+    :func:`solve_replication`), the latter stamps the gate-measured (3,)
+    deduplicated copy volumes onto the plan for at-gate vs post-plan
+    accounting.
     """
     lam = lam.astype(_I32)
     home = home.astype(_I32)
@@ -531,6 +577,7 @@ def solve_plan(
         probe_parallelism=probe_parallelism,
         rack_size=rack_size,
         health_weight=health_weight,
+        demand_tiebreak=demand_tiebreak,
     )
     q = solve_reroute(lam, u, locality=locality, rack_size=rack_size)
     x = slot_assignment(u, home, n_slot)
@@ -553,4 +600,5 @@ def solve_plan(
                      else token_tier_volumes(q, rack_size)),
         tier_replicas=(None if rack_size is None
                        else replica_tier_volumes(u, home, rack_size)),
+        gate_tier_tokens=gate_tier_tokens,
     )

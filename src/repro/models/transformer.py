@@ -42,8 +42,8 @@ from repro.moe.layer import (
 
 __all__ = ["RuntimeConfig", "ParallelCtx", "BlockParams", "Segment",
            "build_segments", "segments_for", "segment_apply", "attn_config",
-           "ssm_config", "moe_config", "init_block", "init_cache_block",
-           "shard_map_compat"]
+           "ssm_config", "moe_config", "effective_rack_limit", "init_block",
+           "init_cache_block", "shard_map_compat"]
 
 
 def shard_map_compat(f, *, mesh, in_specs, out_specs):
@@ -79,6 +79,10 @@ class RuntimeConfig:
     # (repro.core.quantize, DESIGN.md S12); needs the fused engine, so it
     # degrades to "none" when dispatch_impl == "reference".
     ffn_dtype: str = "none"        # expert FFN compute: "none" | "int8" (w8a8)
+    rack_limit: int = 0            # bound each token's experts to this many
+    # racks at the gate (0 = free routing, DESIGN.md S14); degrades to free
+    # routing on flat/single-rack meshes and whenever the limit would expose
+    # fewer than top_k experts (see effective_rack_limit).
     block_kv: int = 512
     dtype: Any = jnp.float32
     remat: bool = True
@@ -194,17 +198,40 @@ def ssm_config(cfg: ModelConfig) -> SSMConfig:
                      n_groups=s.n_groups, d_conv=s.d_conv, chunk=s.chunk)
 
 
+def effective_rack_limit(m, rcfg: RuntimeConfig, racks: int) -> int:
+    """The gate rack limit actually applied, with safe degradation.
+
+    ``rcfg.rack_limit`` is a deployment knob; it silently degrades to free
+    routing (0) whenever the topology or architecture cannot honor it: a
+    flat or single-rack mesh has no inter-rack tier to bound, experts that
+    do not divide evenly into racks break the rack-blocked layout the mask
+    assumes, and a limit exposing fewer than ``top_k`` experts could not
+    route at all.  Clamped to the rack count otherwise.
+    """
+    if rcfg.rack_limit <= 0 or racks <= 1 or m is None:
+        return 0
+    if m.num_experts % racks != 0:
+        return 0
+    limit = min(rcfg.rack_limit, racks)
+    if limit * (m.num_experts // racks) < m.top_k:
+        return 0
+    return limit
+
+
 def moe_config(cfg: ModelConfig, rcfg: RuntimeConfig, pctx: ParallelCtx,
                tokens_per_rank: int, *, dispatch_mode: str = "a2a",
                ideal: bool = False) -> MoEConfig:
     m = cfg.moe
     ep = pctx.ep_size
+    rack_limit = effective_rack_limit(m, rcfg, pctx.racks)
     gating = GatingConfig(
         num_experts=m.num_experts, top_k=m.top_k, score_fn=m.score_fn,
         norm_topk_prob=m.norm_topk_prob, aux_loss_weight=m.aux_loss_weight,
         routed_scaling=m.routed_scaling, use_bias=m.use_bias,
         bias_update_speed=m.bias_update_speed,
         ideal=ideal or rcfg.balancer.mode == "ideal",
+        rack_limit=rack_limit,
+        num_racks=pctx.racks if rack_limit else 1,
     )
     bal = dataclasses.replace(rcfg.balancer, n_slot=m.n_slot)
     slots_per_rank = m.num_experts // ep + m.n_slot

@@ -60,7 +60,7 @@ from repro.moe.dispatch import (
 )
 from repro.moe.distribute import materialize_replica_stack
 from repro.moe.expert import grouped_ffn
-from repro.moe.gating import GateOut, gate
+from repro.moe.gating import GateOut, gate, rack_copy_volumes
 from repro.moe.permute import (
     fused_bucket,
     fused_combine,
@@ -111,6 +111,14 @@ class MoEStats(NamedTuple):
                                 #    per tier = tier_tokens * the per-item
                                 #    payload width of cfg.wire_dtype
                                 #    (repro.core.quantize, DESIGN.md S12)
+    # At-gate twins of tier_tokens/tier_bytes (rack-aware non-replicated
+    # modes; DESIGN.md S14): deduplicated payload copies measured at the
+    # gate against the home placement, BEFORE the plan's reroute --
+    # gate_tier_tokens[2] is the aggregated hop-1 volume an M-rack-limited
+    # gate bounds to <= M copies per token, vs tier_tokens[2] which is what
+    # the solved plan actually ships (in items).
+    gate_tier_tokens: jax.Array | None = None  # (3,) [local, intra, inter]
+    gate_tier_bytes: jax.Array | None = None   # (3,) copies * payload width
     # Resilience counters (populated when run with a Resilience; DESIGN.md
     # S13).  fallback_plans counts degradation-ladder activations of THIS
     # call (solve -> last-good -> no-balance, plus transfer-exhaustion
@@ -139,6 +147,10 @@ class GateState(NamedTuple):
     gate_out: GateOut    # expert_ids/weights/counts/aux_loss for the full T
     lam: jax.Array       # (R, E) exact per-rank per-expert load
     my: jax.Array        # () this rank's EP index (rack-major when factored)
+    gate_tier_tokens: jax.Array | None = None  # (3,) EP-global at-gate
+                         #    deduplicated payload copies by tier (rack-aware
+                         #    non-replicated modes; repro.moe.gating
+                         #    .rack_copy_volumes summed over source ranks)
 
 
 class PlanState(NamedTuple):
@@ -250,8 +262,46 @@ class Resilience:
     def num_quarantined(self) -> int:
         return 0 if self.health is None else self.health.num_quarantined
 
+    # -- distribute rung: live-health relay scheduling ---------------------
+
+    def rank_speed(self):
+        """(R,) live relative channel speeds for the relay builder, or None.
+
+        The same :meth:`RankHealth.planner_weights` vector that scales the
+        plan's quotas: a half-speed rank's relay channels cost 2x seconds,
+        a quarantined rank (weight 0, clamped by the builder) is effectively
+        last in every tree -- so replica broadcast trees route *around*
+        degraded ranks with the same live signal the planner drains them by.
+        """
+        if self.health is None:
+            return None
+        return self.health.planner_weights()
+
+    def relay_schedule(self, plan, expert_bytes: int, home, *,
+                       relay_threshold: int = 3, topology=None):
+        """Build the plan's replica broadcast schedule under LIVE speeds.
+
+        Host-side companion of :func:`distribute_stage` for runners that
+        model or drive the replica stream explicitly (serving warm-up,
+        benchmarks, the CI fault sweep): previously those called
+        ``build_relay_schedule`` health-blind and only the simulator saw
+        ``rank_speed``; routing the construction through the layer's
+        :class:`Resilience` makes the tree itself health-aware.  ``plan``
+        is a solved (concrete) Plan; ``home`` the (E,) home map.
+        """
+        import numpy as np
+
+        from repro.core import comm_plan
+
+        hosted = np.asarray(plan.hosted).T   # (E, R) expert-major
+        return comm_plan.build_relay_schedule(
+            hosted, np.asarray(home), expert_bytes,
+            relay_threshold=relay_threshold, topology=topology,
+            rank_speed=self.rank_speed())
+
     def solve_with_ladder(self, solve_fn, lam: jax.Array, home: jax.Array,
-                          n_slot: int, rack_size: int | None):
+                          n_slot: int, rack_size: int | None,
+                          gate_tier_tokens: jax.Array | None = None):
         """Run ``solve_fn`` through the ladder; always returns a plan."""
         try:
             plan = solve_fn()
@@ -264,7 +314,8 @@ class Resilience:
                 self.counters["last_good_reuses"] += 1
                 return cached
             self.counters["no_balance_fallbacks"] += 1
-            return balancer_mod.no_balance_plan(lam, home, n_slot, rack_size)
+            return balancer_mod.no_balance_plan(lam, home, n_slot, rack_size,
+                                                gate_tier_tokens)
         if not isinstance(plan.u, jax.core.Tracer):
             self.last_good = plan
         return plan
@@ -407,7 +458,21 @@ def gate_stage(ctx: StageCtx, x: jax.Array, router: jax.Array,
             raise ValueError("axis_name=None requires ep_size == 1")
         lam = gate_out.counts[None]
         my = jnp.asarray(0, _I32)
-    return GateState(gate_out=gate_out, lam=lam, my=my)
+    gate_tiers = None
+    if cfg.rack_size is not None and cfg.dispatch_mode != "replicated":
+        # At-gate tier accounting (DESIGN.md S14): this rank's deduplicated
+        # (token -> destination) payload copies against the home placement,
+        # psum-reduced to the EP-global total alongside the load gather.
+        gate_tiers = rack_copy_volumes(
+            gate_out.expert_ids, cfg.layout.home(),
+            num_ranks=R, rack_size=cfg.rack_size, src_rank=my)
+        if ctx.factored:
+            gate_tiers = jax.lax.psum(
+                jax.lax.psum(gate_tiers, ctx.lane_axis), ctx.rack_axis)
+        elif ctx.axis_name is not None:
+            gate_tiers = jax.lax.psum(gate_tiers, ctx.axis_name)
+    return GateState(gate_out=gate_out, lam=lam, my=my,
+                     gate_tier_tokens=gate_tiers)
 
 
 def plan_stage(ctx: StageCtx, gs: GateState, *,
@@ -435,7 +500,9 @@ def plan_stage(ctx: StageCtx, gs: GateState, *,
         plan = balancer_mod.solve(gs.lam, home, cfg.balancer,
                                   lam_e_est=lam_e_est,
                                   rack_size=cfg.rack_size,
-                                  health_weight=health_weight)
+                                  health_weight=health_weight,
+                                  demand_tiebreak=cfg.gating.rack_binding,
+                                  gate_tier_tokens=gs.gate_tier_tokens)
         deadline = None if res is None else res.cfg.solve_deadline_s
         if deadline is not None and time.monotonic() - t0 > deadline:
             raise SolveTimeout(
@@ -446,7 +513,8 @@ def plan_stage(ctx: StageCtx, gs: GateState, *,
         plan = _solve()
     else:
         plan = res.solve_with_ladder(_solve, gs.lam, home,
-                                     cfg.balancer.n_slot, cfg.rack_size)
+                                     cfg.balancer.n_slot, cfg.rack_size,
+                                     gs.gate_tier_tokens)
     return PlanState(plan=plan, slot_of_all=physical_slot_of(layout, plan.x))
 
 
@@ -485,7 +553,8 @@ def _distribute_with_ladder(
     except TransferFault:
         res.counters["fallback_plans"] += 1
         plan = balancer_mod.no_balance_plan(
-            gs.lam, cfg.layout.home(), cfg.balancer.n_slot, cfg.rack_size)
+            gs.lam, cfg.layout.home(), cfg.balancer.n_slot, cfg.rack_size,
+            gs.gate_tier_tokens)
         ps = PlanState(plan=plan,
                        slot_of_all=physical_slot_of(cfg.layout, plan.x))
     dist = distribute_stage(ctx, params, gs, ps)
@@ -782,6 +851,10 @@ def run_staged_moe(
         # the host cost model and the static verifier via repro.core.quantize.
         tier_bytes = ps.plan.tier_tokens * payload_bytes_per_item(
             D, cfg.wire_dtype, base_bytes=x.dtype.itemsize)
+    gate_tier_bytes = None
+    if ps.plan.gate_tier_tokens is not None:
+        gate_tier_bytes = ps.plan.gate_tier_tokens * payload_bytes_per_item(
+            D, cfg.wire_dtype, base_bytes=x.dtype.itemsize)
 
     fallbacks = quarantined = None
     if res is not None:
@@ -798,6 +871,8 @@ def run_staged_moe(
         tier_tokens=ps.plan.tier_tokens,
         tier_replicas=ps.plan.tier_replicas,
         tier_bytes=tier_bytes,
+        gate_tier_tokens=ps.plan.gate_tier_tokens,
+        gate_tier_bytes=gate_tier_bytes,
         fallback_plans=fallbacks,
         dropped_payload_tokens=(dropped_payload if res is not None else None),
         quarantined_ranks=quarantined,

@@ -19,7 +19,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models.model import (LMParams, blocked_lm_loss, forward,
                                 init_router_bias, lm_loss)
-from repro.models.transformer import ParallelCtx, RuntimeConfig
+from repro.models.transformer import (ParallelCtx, RuntimeConfig,
+                                      effective_rack_limit)
 from repro.moe.gating import update_router_bias
 from repro.optim.optimizer import Optimizer, apply_updates, clip_by_global_norm
 
@@ -109,10 +110,16 @@ def make_train_step(cfg: ModelConfig, rcfg: RuntimeConfig, pctx: ParallelCtx,
         router_bias = state.router_bias
         if router_bias is not None and tcfg.bias_update and cfg.moe is not None:
             # DeepSeek aux-free update from the realized per-layer loads
-            # (outside the gradient), vmapped over MoE layers.
+            # (outside the gradient), vmapped over MoE layers.  When the
+            # gate's rack limit binds, switch to the two-level per-rack
+            # variant so the update both reorders within racks and steers
+            # the rack mask (DESIGN.md S14).
             speed = cfg.moe.bias_update_speed
+            limit = effective_rack_limit(cfg.moe, rcfg, pctx.racks)
+            bias_racks = pctx.racks if (limit and limit < pctx.racks) else 1
             is_moe_layer = counts.sum(axis=1) > 0
-            upd = jax.vmap(lambda b, c: update_router_bias(b, c, speed))(
+            upd = jax.vmap(lambda b, c: update_router_bias(
+                b, c, speed, num_racks=bias_racks))(
                 router_bias, counts)
             router_bias = jnp.where(is_moe_layer[:, None], upd, router_bias)
         metrics = {

@@ -20,7 +20,14 @@ and cross-checks them against the verifier's independent width mirror
 1.0,0.5,0.0`` additionally solves each ultraep cell with rank 0 degraded to
 the given relative speed and checks the health-capacity/quarantine
 invariants (quota scales with weight, a 0-weight rank drains to zero, tier
-volumes stay conserved) -- the degraded-fabric fault sweep (DESIGN.md S13).
+volumes stay conserved) -- the degraded-fabric fault sweep (DESIGN.md S13);
+``--rack-limit 1,2`` additionally gates random tokens through rack-limited
+routing at each limit M (plus the M=racks free-equality case) on every
+rack-aware cell, checks the span invariant
+(:func:`repro.analysis.plan_check.verify_rack_limit`), and solves the
+resulting load with the planner co-design inputs (``demand_tiebreak`` +
+at-gate ``gate_tier_tokens``) so the gate-tier accounting is verified
+end-to-end (DESIGN.md S14).
 """
 
 from __future__ import annotations
@@ -80,11 +87,19 @@ def main(argv: list[str] | None = None) -> int:
                          "ultraep cell is re-solved health-weighted and "
                          "checked for quota-proportionality / quarantine "
                          "drain / tier conservation (e.g. '1.0,0.5,0.0')")
+    ap.add_argument("--rack-limit", type=str, default="",
+                    help="comma-separated rack limits M; every rack-aware "
+                         "cell additionally gates random tokens rack-limited "
+                         "at each M (plus the M=racks free-routing equality "
+                         "case), checks the span invariant and solves the "
+                         "resulting load with demand_tiebreak + at-gate "
+                         "gate_tier_tokens (e.g. '1,2')")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
     chunk_list = [int(c) for c in args.chunks.split(",") if c.strip()]
     wire_list = [w.strip() for w in args.wire_dtype.split(",") if w.strip()]
     health_list = [float(h) for h in args.health.split(",") if h.strip()]
+    rl_list = [int(m) for m in args.rack_limit.split(",") if m.strip()]
 
     import jax
     jax.config.update("jax_platforms", "cpu")
@@ -104,6 +119,57 @@ def main(argv: list[str] | None = None) -> int:
         topo = (Topology(racks=R // rack_size, ranks_per_rack=rack_size)
                 if rack_size else Topology.flat(R))
         home = jnp.repeat(jnp.arange(R, dtype=jnp.int32), E // R)
+
+        # Rack-limited routing sweep: gate random tokens at each limit M,
+        # verify the span/free-equality invariants, then solve the gated
+        # load with the planner co-design inputs so the gate-tier
+        # accounting in verify_plan is exercised end-to-end.
+        G = (R // rack_size) if rack_size else 1
+        if rl_list and rack_size and G > 1:
+            from repro.moe.gating import (GatingConfig, gate,
+                                          rack_copy_volumes)
+            kk, t_rank, d = 4, 32, 16
+            for seed in range(args.seeds):
+                key = jax.random.PRNGKey(
+                    hash((E, R, rack_size, "rack-limit", seed)) % 2**32)
+                x = jax.random.normal(key, (t_rank * R, d))
+                wg = jax.random.normal(jax.random.fold_in(key, 1), (d, E))
+                free = gate(x, wg, GatingConfig(num_experts=E, top_k=kk))
+                for M in sorted({min(m, G) for m in rl_list} | {G}):
+                    cfg_m = GatingConfig(num_experts=E, top_k=kk,
+                                         num_racks=G, rack_limit=M)
+                    gated = gate(x, wg, cfg_m)
+                    vio = plan_check.verify_rack_limit(
+                        gated.expert_ids, rack_limit=M, num_racks=G,
+                        num_experts=E, free_expert_ids=free.expert_ids)
+                    ids = np.asarray(gated.expert_ids).reshape(R, t_rank, kk)
+                    lam = np.zeros((R, E), np.int32)
+                    gt = jnp.zeros((3,), jnp.int32)
+                    for r in range(R):
+                        np.add.at(lam[r], ids[r].ravel(), 1)
+                        gt = gt + rack_copy_volumes(
+                            jnp.asarray(ids[r]), home, num_ranks=R,
+                            rack_size=rack_size, src_rank=jnp.int32(r))
+                    plan = balancer.solve(
+                        jnp.asarray(lam), home,
+                        balancer.BalancerConfig(mode="ultraep", n_slot=2),
+                        rack_size=rack_size,
+                        demand_tiebreak=(M < G), gate_tier_tokens=gt)
+                    vio += plan_check.verify_plan(
+                        plan, topo, lam=lam, home=np.asarray(home),
+                        rack_aware_mode=True)
+                    n_cells += 1
+                    cell = (f"E={E} R={R} rack={rack_size} rack_limit={M} "
+                            f"seed={seed}")
+                    for v in errors(vio):
+                        n_err += 1
+                        failed.append(f"{cell}: {v}")
+                    for v in warnings(vio):
+                        n_warn += 1
+                        warn_rules[v.rule] = warn_rules.get(v.rule, 0) + 1
+                        if args.verbose:
+                            print(f"{cell}: {v}")
+
         for skew in SKEWS:
             for mode in MODES:
                 for seed in range(args.seeds):
